@@ -1,0 +1,29 @@
+"""Shared benchmark utilities.
+
+Benchmarks run on 8 fake host devices (set before jax import by run.py).
+CPU wall-clock is NOT TPU-representative; each table therefore reports both
+measured time and the derived/model quantity the paper's table is about
+(accuracy, wire bytes, selection cost, iteration counts).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, n: int = 20, warmup: int = 3):
+    """Median wall-clock seconds per call (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

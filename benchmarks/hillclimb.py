@@ -1,0 +1,74 @@
+"""§Perf hillclimb driver: lower+compile a (arch x shape) variant with
+experiment knobs and print its roofline terms — the measure step of the
+hypothesis -> change -> measure -> validate loop (EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python -m benchmarks.hillclimb smollm_135m prefill_32k \
+      --rules seq=model
+  PYTHONPATH=src python -m benchmarks.hillclimb kimi_k2_1t_a32b decode_32k \
+      --param-rules expert_mlp=data --no-fsdp-embed
+  PYTHONPATH=src python -m benchmarks.hillclimb gemma_2b train_4k --knn
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+
+def parse_rules(items):
+    out = []
+    for it in items:
+        k, _, v = it.partition("=")
+        if v in ("none", "None", ""):
+            out.append((k, None))
+        elif "," in v:
+            out.append((k, tuple(v.split(","))))
+        else:
+            out.append((k, v))
+    return tuple(out)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("arch")
+    p.add_argument("shape")
+    p.add_argument("--rules", nargs="*", default=[],
+                   help="activation rule overrides, e.g. seq=model")
+    p.add_argument("--param-rules", nargs="*", default=[])
+    p.add_argument("--knn", action="store_true")
+    p.add_argument("--no-fsdp", action="store_true")
+    p.add_argument("--remat", default="full", choices=["none", "full"])
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--tag", default="")
+    p.add_argument("--log", default="perf_iterations.jsonl")
+    args = p.parse_args(argv)
+
+    from repro.launch.dryrun import lower_one
+    from repro.roofline.analysis import analyze_record
+
+    res = lower_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                    use_knn=args.knn, remat=args.remat,
+                    extra_rules=parse_rules(args.rules),
+                    extra_param_rules=parse_rules(args.param_rules),
+                    fsdp=not args.no_fsdp)
+    res["tag"] = args.tag or "baseline"
+    res["knobs"] = {"rules": args.rules, "param_rules": args.param_rules,
+                    "knn": args.knn, "fsdp": not args.no_fsdp,
+                    "remat": args.remat}
+    row = analyze_record(res)
+    print(f"[hillclimb] {args.arch} x {args.shape} [{res['tag']}]")
+    print(f"  compute    {row.compute_s:10.3e} s")
+    print(f"  memory     {row.memory_s:10.3e} s")
+    print(f"  collective {row.collective_s:10.3e} s   dominant={row.dominant}")
+    print(f"  useful     {row.useful_ratio:.3f}   peak {row.peak_gib:.1f} "
+          f"GiB/dev (fits16G={row.fits})")
+    with open(args.log, "a") as f:
+        f.write(json.dumps(res) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

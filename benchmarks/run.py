@@ -1,0 +1,48 @@
+"""Benchmark driver — one module per paper table. Prints
+``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src:. python -m benchmarks.run [--quick] [--only tableN]
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="reduced sizes/steps (CI)")
+    p.add_argument("--only", default="",
+                   help="comma-separated table names (e.g. table2,table6)")
+    args = p.parse_args(argv)
+    # 8 fake devices for the hybrid-parallel benchmarks (before jax import)
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+    from benchmarks import (table2_knn_accuracy, table3_knn_throughput,
+                            table4_comm, table5_sparse_accuracy,
+                            table6_topk, table7_fccs, table8_end2end)
+    tables = {
+        "table2": table2_knn_accuracy.run,
+        "table3": table3_knn_throughput.run,
+        "table4": table4_comm.run,
+        "table5": table5_sparse_accuracy.run,
+        "table6": table6_topk.run,
+        "table7": table7_fccs.run,
+        "table8": table8_end2end.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(tables)
+    print("name,us_per_call,derived")
+    for name, fn in tables.items():
+        if name not in only:
+            continue
+        try:
+            fn(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+            raise
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

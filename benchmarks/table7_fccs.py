@@ -1,0 +1,69 @@
+"""Paper Table 7 / Figs 6-7: fast continuous convergence strategy.
+
+Compares, at identical step budget:
+  * FCCS (warmup LR + cosine batch growth via grad accumulation)
+  * FCCS without batch-size policy (constant LR, constant batch) — the
+    paper's ablation that collapses (68.12% vs 87.40%)
+  * piecewise decay (the traditional policy; paper's accuracy reference)
+  * Adam (paper: noticeably worse)
+and reports accuracy + effective epochs (sample budget) consumed.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row
+from repro.configs.base import FCCSConfig, HeadConfig, ModelConfig, TrainConfig
+from repro.core import fccs
+from repro.data.synthetic import ClassificationStream, sku_feature_batch
+from repro.train import hybrid
+from repro.train.trainer import PaperTrainer
+
+
+def run(quick: bool = False):
+    N, D, B = (1024, 64, 64) if quick else (4096, 64, 128)
+    steps = 120 if quick else 500
+    eta0 = 4.0
+    stream = ClassificationStream(N, D, seed=0)
+    mesh = hybrid.make_hybrid_mesh(8)
+    mcfg = ModelConfig(name="t7", family="feats", n_layers=0, d_model=D,
+                       n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=N,
+                       dtype="float32")
+    hcfg = HeadConfig()
+    fcfg = FCCSConfig(eta0=eta0, t_warm=steps // 10, b0=B, b_min=B,
+                      b_max=8 * B, t_ini=steps // 4, t_final=steps)
+    data_fn = lambda t, b: sku_feature_batch(t, b, stream)
+
+    def train(name, tcfg, lr_fn=None, use_fccs_batch=False):
+        trainer = PaperTrainer(mcfg, hcfg, tcfg, mesh, data_fn, hw_batch=B,
+                               lr_fn=lr_fn, log_every=0)
+        hist = trainer.run(steps, use_fccs_batch=use_fccs_batch)
+        acc = trainer.evaluate(data_fn(10**6, 512))
+        samples = sum(h["batch"] for h in hist)
+        row(f"table7/{name}", 0.0,
+            f"accuracy={acc:.4f} samples={samples} "
+            f"final_loss={hist[-1]['loss']:.3f}")
+        return acc
+
+    accs = {}
+    accs["fccs"] = train("fccs", TrainConfig(optimizer="sgd", fccs=fcfg),
+                         use_fccs_batch=True)
+    accs["fccs_no_batch_policy"] = train(
+        "fccs_no_batch_policy", TrainConfig(optimizer="sgd", fccs=fcfg),
+        use_fccs_batch=False)
+    accs["piecewise"] = train(
+        "piecewise_decay", TrainConfig(optimizer="sgd", fccs=fcfg),
+        lr_fn=lambda t: fccs.piecewise_decay_lr(
+            t, eta0=eta0, steps_per_epoch=max(1, steps // 20)))
+    accs["adam"] = train(
+        "adam", TrainConfig(optimizer="adam", fccs=fcfg),
+        lr_fn=lambda t: 1e-3)
+
+    ok = (accs["fccs"] >= accs["fccs_no_batch_policy"] - 0.01
+          and accs["fccs"] >= accs["piecewise"] - 0.08)
+    row("table7/claim_fccs_competitive", 0.0, f"holds={ok}")
+    return accs
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,9 @@
+# Root conftest: make `repro` (src layout) and the `tests`/`benchmarks`
+# packages importable regardless of how pytest is invoked.
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (os.path.join(_ROOT, "src"), _ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)

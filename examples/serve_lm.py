@@ -1,0 +1,30 @@
+"""Batched LM serving with the sharded-vocab head (deploy path, §4.5 analog):
+prefill a batch of prompts, then greedy-decode with the rotating KV cache
+and the distributed argmax. Works for any decoder-only zoo arch.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2_370m
+"""
+import argparse
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="smollm_135m")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--prompt-len", type=int, default=24)
+    p.add_argument("--gen", type=int, default=12)
+    args = p.parse_args()
+    from repro.launch.serve import main as serve_main
+    return serve_main(["--arch", args.arch, "--reduced",
+                       "--batch", str(args.batch),
+                       "--prompt-len", str(args.prompt_len),
+                       "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

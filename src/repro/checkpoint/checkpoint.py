@@ -1,0 +1,81 @@
+"""Checkpointing: msgpack + zstd of flattened pytrees.
+
+Arrays are gathered to host (fully-addressable single-process here; on a real
+multi-host pod each host would write its addressable shards — the format
+already keys leaves by tree path, so per-shard files compose). Restore takes
+a ``target`` template pytree (params/opt-state structure with NamedTuples)
+and refills its leaves, preserving shardings via device_put-like placement by
+the caller.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree: Any, step: int = 0) -> str:
+    """Write ``<path>/ckpt_<step>.msgpack.zst``. Returns the file path."""
+    os.makedirs(path, exist_ok=True)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    payload = {"step": step, "leaves": {}}
+    for kp, leaf in leaves_with_paths:
+        arr = np.asarray(jax.device_get(leaf))
+        payload["leaves"][_key_str(kp)] = {
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+    raw = msgpack.packb(payload, use_bin_type=True)
+    fname = os.path.join(path, f"ckpt_{step}.msgpack.zst")
+    with open(fname, "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+    return fname
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for fn in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.msgpack\.zst$", fn))]
+    return max(steps) if steps else None
+
+
+def restore(path: str, target: Any, step: Optional[int] = None):
+    """Refill ``target``'s leaves from a checkpoint. Returns (tree, step)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    fname = os.path.join(path, f"ckpt_{step}.msgpack.zst")
+    with open(fname, "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    stored = payload["leaves"]
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    new_leaves = []
+    for kp, leaf in leaves_with_paths:
+        key = _key_str(kp)
+        if key not in stored:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = stored[key]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        new_leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), payload["step"]

@@ -1,0 +1,24 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    DGCConfig,
+    FCCSConfig,
+    HeadConfig,
+    INPUT_SHAPES,
+    InputShape,
+    LONG_CONTEXT_SKIP,
+    ModelConfig,
+    MoEConfig,
+    ParallelConfig,
+    SSMConfig,
+    TrainConfig,
+    for_shape,
+    get_model_config,
+    normalize_arch_id,
+)
+
+__all__ = [
+    "ARCH_IDS", "DGCConfig", "FCCSConfig", "HeadConfig", "INPUT_SHAPES",
+    "InputShape", "LONG_CONTEXT_SKIP", "ModelConfig", "MoEConfig",
+    "ParallelConfig", "SSMConfig", "TrainConfig", "for_shape",
+    "get_model_config", "normalize_arch_id",
+]

@@ -1,0 +1,247 @@
+"""Config system: dataclasses for model / head / parallelism / training.
+
+Every assigned architecture gets a module in this package defining
+``config() -> ModelConfig`` with the exact published hyper-parameters (source
+cited in ``source``) and ``reduced() -> ModelConfig`` — the smoke-test variant
+(<=2 layers, d_model<=512, <=4 experts) of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden dim
+    router_aux_coef: float = 0.01  # load-balance auxiliary loss
+    n_shared_experts: int = 0      # dense experts always active (deepseek/kimi style)
+    capacity_factor: float = 1.25  # token-dropping capacity (GShard-style)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64             # mamba2 P (channels per SSM head)
+    chunk: int = 64                # SSD chunk length for training scan
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None         # default d_model // n_heads
+    activation: str = "swiglu"             # swiglu | geglu | gelu
+    norm: str = "rmsnorm"                  # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None   # None = full causal attention
+    tie_embeddings: bool = True
+    # encoder-decoder (whisper) --------------------------------------------
+    n_enc_layers: int = 0
+    enc_seq: int = 0                       # fixed encoder length (1500 frames)
+    # feature dims of the stubbed frontend equal d_model
+    # subconfigs -----------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # numerics ---------------------------------------------------------------
+    dtype: str = "bfloat16"                # activation/compute dtype
+    param_dtype: str = "float32"           # master params
+    # vocab padding (Megatron-style): when the published vocab does not
+    # divide the model axis, pad W/embedding rows and mask padded logits.
+    real_vocab_size: Optional[int] = None  # set by pad_vocab()
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def with_sliding_window(self, window: int = 4096) -> "ModelConfig":
+        return replace(self, sliding_window=window)
+
+
+@dataclass(frozen=True)
+class HeadConfig:
+    """The paper's contribution: hybrid-parallel extreme-classification head."""
+    softmax_impl: str = "full"     # full | knn | selective | mach
+    # KNN softmax (paper §3.2)
+    knn_k: int = 16                # neighbors per class in the graph
+    knn_kprime: int = 32           # recall k' > k in bf16 pass, re-rank fp32
+    active_frac: float = 0.10      # M = active_frac * N (paper: "10% active classes")
+    rebuild_every: int = 0         # steps between graph rebuilds (0 = never/manual)
+    # selective softmax baseline (HF-A)
+    selective_n_hash: int = 4
+    selective_n_bits: int = 8
+    # MACH baseline
+    mach_b: int = 64               # buckets
+    mach_r: int = 4                # repetitions
+    label_smoothing: float = 0.0
+    z_loss: float = 0.0            # beyond-paper stabilizer, off by default
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    mesh_shape: tuple = (16, 16)
+    axis_names: tuple = ("data", "model")
+    # logical axis -> mesh axis rules (MaxText-style)
+    rules: tuple = (
+        ("batch", ("pod", "data")),
+        ("vocab", "model"),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("mlp", "model"),
+        ("experts", "model"),
+        ("expert_mlp", None),
+        ("head_dim", None),
+        ("inner", "model"),        # ssm d_inner
+        ("embed", None),
+        ("seq", None),
+        ("layers", None),
+    )
+    remat: str = "none"            # none | full — activation checkpointing policy
+    # FSDP/ZeRO: separate rules for PARAMETERS (and optimizer moments).
+    # None -> params follow `rules`. Production configs prepend
+    # ("embed", "data") so weight matrices shard their embed dim over the
+    # data axis (per-layer all-gather in fwd, reduce-scatter in bwd).
+    param_rules: Optional[tuple] = None
+
+    @property
+    def batch_axes(self) -> tuple:
+        return tuple(a for a in ("pod", "data") if a in self.axis_names)
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+    def _lookup(self, rules, logical: str):
+        for k, v in rules:
+            if k == logical:
+                if isinstance(v, tuple):
+                    return tuple(a for a in v if a in self.axis_names) or None
+                if v is not None and v not in self.axis_names:
+                    return None
+                return v
+        return None
+
+    def mesh_axis_for(self, logical: str):
+        return self._lookup(self.rules, logical)
+
+    def mesh_axis_for_param(self, logical: str):
+        return self._lookup(self.param_rules or self.rules, logical)
+
+
+@dataclass(frozen=True)
+class FCCSConfig:
+    """Fast continuous convergence strategy (paper §3.4)."""
+    eta0: float = 0.4
+    t_warm: int = 100              # warm-up iterations
+    b0: int = 4096                 # initial (accumulated) global batch
+    b_min: int = 4096              # B^1_min
+    b_max: int = 262144            # B^1_max = 64 * B^1_min (paper)
+    t_ini: int = 100               # start of the cosine growth stage
+    t_final: int = 2000            # end of the cosine growth stage
+
+
+@dataclass(frozen=True)
+class DGCConfig:
+    """Layer-wise top-k gradient sparsification (paper §3.3.2 / DGC)."""
+    enabled: bool = False
+    sparsity: float = 0.999        # keep-fraction = 1 - sparsity
+    momentum: float = 0.9
+    factor_masking: bool = True
+    chunk: int = 2048              # divide-and-conquer chunk size
+    group_bytes: int = 1 << 22     # tensor-grouping target bucket size
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "lars"        # sgd | lars | adam
+    weight_decay: float = 1e-4
+    momentum: float = 0.9
+    micro_batch: int = 0           # 0 = no microbatching (one shot)
+    grad_accum: int = 1
+    loss_scale: float = 0.0        # 0 = off; >0 static; <0 dynamic
+    fccs: FCCSConfig = field(default_factory=FCCSConfig)
+    dgc: DGCConfig = field(default_factory=DGCConfig)
+    seed: int = 0
+    steps: int = 200
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                      # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",  524_288,    1, "decode"),
+}
+
+ARCH_IDS = [
+    "mamba2_370m", "kimi_k2_1t_a32b", "qwen3_moe_30b_a3b", "phi3_mini_3_8b",
+    "qwen3_1_7b", "gemma_2b", "whisper_tiny", "chameleon_34b", "smollm_135m",
+    "hymba_1_5b",
+]
+
+# long_500k applicability (DESIGN.md §3): ssm/hybrid natively; dense/moe/vlm via
+# the sliding-window variant; whisper (enc-dec, 448-ctx decoder) skipped.
+LONG_CONTEXT_SKIP = {"whisper_tiny"}
+
+
+def normalize_arch_id(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_model_config(arch: str, reduced: bool = False) -> ModelConfig:
+    arch = normalize_arch_id(arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    cfg = mod.reduced() if reduced else mod.config()
+    return cfg
+
+
+def pad_vocab(cfg: ModelConfig, multiple: int = 128) -> ModelConfig:
+    """Pad vocab to a multiple (model-axis divisibility + lane alignment).
+    Labels stay < real_vocab_size; padded logits are masked in the loss."""
+    if cfg.vocab_size % multiple == 0:
+        return cfg
+    padded = -(-cfg.vocab_size // multiple) * multiple
+    return replace(cfg, vocab_size=padded,
+                   real_vocab_size=cfg.real_vocab_size or cfg.vocab_size)
+
+
+def effective_vocab(cfg: ModelConfig) -> int:
+    return cfg.real_vocab_size or cfg.vocab_size
+
+
+def for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Adapt a model config to an input shape (sliding window for long ctx)."""
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        return cfg.with_sliding_window(4096)
+    return cfg
+
+
+def asdict(cfg) -> dict:
+    return dataclasses.asdict(cfg)

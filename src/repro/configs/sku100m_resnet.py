@@ -1,0 +1,48 @@
+"""The paper's own setting: ResNet-50-class CNN feature extractor (D=512
+embedding) + an extreme-classification head (paper: N = 1M / 10M / 100M SKU
+classes). Used by the paper-table benchmarks and the paper-shape dry-run.
+
+``family="cnn"`` models consume images [B, H, W, 3]; the trunk is a
+ResNet-v1.5-style network defined in models/resnet.py (implemented in JAX —
+not stubbed; BatchNorm replaced by GroupNorm so the data-parallel trunk has no
+cross-device batch statistics, noted in DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config(n_classes: int = 100_001_020) -> ModelConfig:
+    return ModelConfig(
+        name="sku100m-resnet50",
+        family="cnn",
+        n_layers=50,
+        d_model=512,               # paper: feature dim 512
+        n_heads=0,
+        n_kv_heads=0,
+        d_ff=0,
+        vocab_size=n_classes,      # classes == "vocab" for the shared head
+        tie_embeddings=False,
+        source="KDD'20 paper §4 (ResNet-50, D=512, SKU-100M)",
+    )
+
+
+def config_1m() -> ModelConfig:
+    return config(1_020_250)
+
+
+def config_10m() -> ModelConfig:
+    return config(9_890_866)
+
+
+def reduced(n_classes: int = 1024) -> ModelConfig:
+    return ModelConfig(
+        name="sku-resnet-reduced",
+        family="cnn",
+        n_layers=8,
+        d_model=128,
+        n_heads=0,
+        n_kv_heads=0,
+        d_ff=0,
+        vocab_size=n_classes,
+        tie_embeddings=False,
+        source="reduced smoke variant",
+    )

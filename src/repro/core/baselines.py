@@ -1,0 +1,143 @@
+"""Baseline softmax approximations the paper compares against (§4.1).
+
+* Selective softmax [Zhang et al., AAAI'18] — HF-A flavored: active classes
+  are chosen by locality-sensitive hashing of the *features* (random
+  hyperplane tables over the normalized weights, queried by each sample's
+  feature hash). Unlike the KNN graph, LSH recall is imperfect, so the true
+  label may be missing from the active set — we force-include it (as HF-A's
+  class-level updates effectively do) but neighbors can be lost, which is
+  the accuracy gap Table 2 shows.
+
+* MACH [Medini et al., NeurIPS'19] — R independent hash functions map N
+  classes to B buckets; train R B-way softmaxes; score class j at inference
+  by averaging P_r(hash_r(j)). Log-memory, but lossy (Table 2).
+
+Both are implemented as real trainable heads so the Table-2-style benchmark
+can train all four methods under identical conditions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharded_softmax import _normalize
+
+# ---------------------------------------------------------------------------
+# selective softmax (LSH active classes)
+# ---------------------------------------------------------------------------
+
+
+class LSHTables(NamedTuple):
+    planes: jax.Array      # [R, D, n_bits] random hyperplanes
+    offsets: jax.Array     # [R, n_buckets+1] CSR per table
+    classes: jax.Array     # [R, nnz] class ids sorted by bucket
+
+
+def build_lsh_tables(key, w, n_tables: int, n_bits: int) -> LSHTables:
+    n, d = w.shape
+    planes = jax.random.normal(key, (n_tables, d, n_bits), jnp.float32)
+    wn = _normalize(w).astype(jnp.float32)
+    bits = (jnp.einsum("nd,rdb->rnb", wn, planes) > 0)
+    bucket = jnp.sum(bits * (1 << jnp.arange(n_bits)), axis=-1)  # [R, N]
+    n_buckets = 1 << n_bits
+    order = jnp.argsort(bucket, axis=1)
+    classes = jnp.take_along_axis(
+        jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (n_tables, n)),
+        order, axis=1)
+    sorted_b = jnp.take_along_axis(bucket, order, axis=1)
+    offsets = jax.vmap(
+        lambda sb: jnp.searchsorted(sb, jnp.arange(n_buckets + 1))
+    )(sorted_b).astype(jnp.int32)
+    return LSHTables(planes, offsets, classes)
+
+
+def selective_active(f, labels, tables: LSHTables, *, m: int, cap: int):
+    """Active classes for a batch: union of LSH buckets hit by each feature,
+    plus the labels themselves. Returns (ids [m], valid [m])."""
+    fn = _normalize(f).astype(jnp.float32)
+    bits = jnp.einsum("bd,rdk->rbk", fn, tables.planes) > 0
+    bucket = jnp.sum(bits * (1 << jnp.arange(tables.planes.shape[-1])), axis=-1)
+    lo = jnp.take_along_axis(tables.offsets, bucket, axis=1)       # [R, b]
+    hi = jnp.take_along_axis(tables.offsets, bucket + 1, axis=1)
+    iota = jnp.arange(cap, dtype=jnp.int32)
+    take = lo[..., None] + iota                                     # [R,b,cap]
+    nnz = tables.classes.shape[1]
+    r_idx = jnp.arange(tables.classes.shape[0])[:, None, None]
+    cand = tables.classes[r_idx, jnp.clip(take, 0, nnz - 1)]        # [R,b,cap]
+    valid_c = take < hi[..., None]
+    cand = jnp.where(valid_c, cand, -1).reshape(-1)
+    cand = jnp.concatenate([labels.astype(jnp.int32), cand])  # force labels in
+    sid = jnp.sort(cand)
+    first = jnp.concatenate([jnp.array([True]), sid[1:] != sid[:-1]])
+    valid = first & (sid >= 0)
+    ylab = jnp.sort(labels.astype(jnp.int32))
+    pos = jnp.searchsorted(ylab, sid)
+    is_label = ylab[jnp.clip(pos, 0, ylab.shape[0] - 1)] == sid
+    score = jnp.where(valid, jnp.where(is_label, 2, 1), 0)  # labels always kept
+    top_score, top_pos = jax.lax.top_k(score, m)
+    ids = jnp.where(top_score > 0, sid[top_pos], 0)
+    return ids.astype(jnp.int32), top_score > 0
+
+
+def selective_softmax_ce(f, labels, w, tables: LSHTables, *, m: int, cap: int,
+                         cosine_scale: float = 16.0):
+    """Single-device selective-softmax CE (benchmark-scale)."""
+    ids, valid = selective_active(f, labels, tables, m=m, cap=cap)
+    fn = _normalize(f).astype(jnp.float32)
+    wa = _normalize(w[ids]).astype(jnp.float32)
+    logits = fn @ wa.T * cosine_scale
+    logits = jnp.where(valid[None, :], logits, -1e30)
+    hit = ids[None, :] == labels[:, None]
+    pos = jnp.argmax(hit, axis=1)
+    corr = jnp.take_along_axis(logits, pos[:, None], axis=1)[:, 0]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    return jnp.mean(logz - corr)
+
+
+# ---------------------------------------------------------------------------
+# MACH
+# ---------------------------------------------------------------------------
+
+
+class MACHHead(NamedTuple):
+    hashes: jax.Array   # [R, N] int32 bucket of each class per repetition
+    w: jax.Array        # [R, B_buckets, D]
+
+
+def init_mach(key, n_classes: int, d: int, *, n_buckets: int, n_rep: int,
+              seed: int = 0):
+    import numpy as np
+    # universal hashing on host: (a*j + b) mod p mod B (static tables)
+    rng = np.random.default_rng(seed)
+    p = 2_147_483_647
+    a = rng.integers(1, p // 2, size=(n_rep, 1)).astype(np.int64) * 2 + 1
+    b = rng.integers(0, p, size=(n_rep, 1)).astype(np.int64)
+    j = np.arange(n_classes, dtype=np.int64)[None, :]
+    hashes = jnp.asarray(((a * j + b) % p % n_buckets).astype(np.int32))
+    w = jax.random.normal(key, (n_rep, n_buckets, d), jnp.float32) / jnp.sqrt(d)
+    return MACHHead(hashes, w)
+
+
+def mach_loss(head: MACHHead, f, labels):
+    """Sum of R bucket-level CE losses."""
+    fl = f.astype(jnp.float32)
+    logits = jnp.einsum("bd,rkd->rbk", fl, head.w)  # [R, batch, B]
+    ybuck = head.hashes[:, labels]                  # [R, batch]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    corr = jnp.take_along_axis(logits, ybuck[:, :, None], axis=2)[:, :, 0]
+    return jnp.mean(jnp.sum(logz - corr, axis=0))
+
+
+def mach_predict(head: MACHHead, f):
+    """argmax_j mean_r P_r(hash_r(j) | f) — [batch] class predictions."""
+    fl = f.astype(jnp.float32)
+    logits = jnp.einsum("bd,rkd->rbk", fl, head.w)
+    probs = jax.nn.softmax(logits, axis=-1)         # [R, batch, B]
+    class_scores = jnp.mean(
+        jnp.take_along_axis(
+            probs[:, :, :], head.hashes[:, None, :].repeat(f.shape[0], 1),
+            axis=2),
+        axis=0)                                     # [batch, N]
+    return jnp.argmax(class_scores, axis=-1)

@@ -1,0 +1,167 @@
+"""Hybrid-parallel distributed softmax cross-entropy (paper §3.1).
+
+The extreme-classification head W [N, D] is split row-wise (by class) across
+the ``model`` mesh axis; features arrive batch-sharded over the data axes and
+replicated along ``model`` (the all-gather the paper overlaps in §3.3.1 is
+what produced that replication). Each device scores its local class shard and
+the softmax is completed with two tiny collectives:
+
+    global max  = pmax over "model"   (numerical stability)
+    global Z    = psum over "model"   (partition function)
+    label logit = psum over "model"   (each class owned by exactly one shard)
+
+The fc gradient stays local to its shard (the paper's key memory/comm win);
+only the feature gradient crosses the model axis (inside autodiff of the
+einsum) and the scalar loss is averaged over the data axes.
+
+These are *shard_map bodies*: they see local shards and use lax collectives
+explicitly, so the paper's communication pattern is visible in the HLO.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# single-device oracle
+# ---------------------------------------------------------------------------
+
+
+def ce_ref(features, labels, w, *, cosine_scale: float = 0.0,
+           label_smoothing: float = 0.0):
+    """Plain full-softmax cross entropy. features [T,D], labels [T], w [N,D].
+    cosine_scale > 0 switches to normalized (cosine) logits — the paper's
+    normalization strategy (§3.2.1)."""
+    f = features.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    if cosine_scale > 0:
+        f = f / (jnp.linalg.norm(f, axis=-1, keepdims=True) + 1e-12)
+        wf = wf / (jnp.linalg.norm(wf, axis=-1, keepdims=True) + 1e-12)
+    logits = f @ wf.T
+    if cosine_scale > 0:
+        logits = logits * cosine_scale
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    n = w.shape[0]
+    corr = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    if label_smoothing > 0:
+        mean_logit = jnp.mean(logits, axis=-1)
+        corr = (1 - label_smoothing) * corr + label_smoothing * mean_logit
+    loss = jnp.mean(logz - corr)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, {"accuracy": acc, "logz": jnp.mean(logz)}
+
+
+# ---------------------------------------------------------------------------
+# shard_map body: full softmax
+# ---------------------------------------------------------------------------
+
+
+def _normalize(x):
+    xf = x.astype(jnp.float32)
+    return (xf / (jnp.linalg.norm(xf, axis=-1, keepdims=True) + 1e-12)).astype(x.dtype)
+
+
+def _flat_axis_index(axis):
+    """Row-major flat index over one axis name or a tuple of axis names
+    (vocab sharded over several mesh axes — the paper's 1-D layout where
+    every chip is an fc shard)."""
+    if isinstance(axis, str):
+        return jax.lax.axis_index(axis)
+    idx = jnp.zeros((), jnp.int32)
+    for a in axis:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _finish_ce(logits, owned_label_pos, owned, model_axis,
+               batch_axes, batch_weight):
+    """Shared distributed-CE tail.
+
+    logits: [b, C_local] fp32 (already scaled); owned_label_pos [b] column of
+    each sample's label in the local shard (only meaningful where ``owned``);
+    owned [b] bool — exactly one device per model group owns each label.
+    Returns (loss scalar replicated, metrics dict).
+    """
+    b = logits.shape[0]
+    m_loc = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+    m = jax.lax.pmax(m_loc, model_axis)
+    z_loc = jnp.sum(jnp.exp(logits - m[:, None]), axis=-1)
+    z = jax.lax.psum(z_loc, model_axis)
+    corr_loc = jnp.take_along_axis(
+        logits, owned_label_pos[:, None].astype(jnp.int32), axis=1)[:, 0]
+    corr_loc = jnp.where(owned, corr_loc, 0.0)
+    corr = jax.lax.psum(corr_loc, model_axis)  # [b] label logit
+    per_sample = jnp.log(z) + m - corr
+    loss = jax.lax.psum(jnp.sum(per_sample) * batch_weight, batch_axes)
+
+    # distributed top-1 accuracy (metrics only — no gradient)
+    logits = jax.lax.stop_gradient(logits)
+    amax_loc = jnp.argmax(logits, axis=-1)
+    vmax_loc = jnp.take_along_axis(logits, amax_loc[:, None], axis=1)[:, 0]
+    vmax = jax.lax.pmax(vmax_loc, model_axis)
+    is_best = vmax_loc >= vmax  # ties: >=; duplicates across shards unlikely
+    pred_here = owned & is_best & (amax_loc == owned_label_pos)
+    correct = jax.lax.psum(pred_here.astype(jnp.float32), model_axis) > 0
+    acc = jax.lax.psum(jnp.sum(correct.astype(jnp.float32)) * batch_weight,
+                       batch_axes)
+    logz = jax.lax.pmean(jnp.mean(jnp.log(z) + m), batch_axes)
+    return loss, {"accuracy": acc, "logz": logz}
+
+
+def full_softmax_local(
+    f_loc, y_loc, w_loc, *, model_axis: str,
+    batch_axes: Sequence[str], global_batch: int, cosine_scale: float = 0.0,
+    n_valid: int = 0,
+):
+    """shard_map body. f_loc [b,D] (replicated along model), y_loc [b] global
+    class ids, w_loc [V_loc, D] this device's class shard (row offset derived
+    from the device's model-axis index). n_valid > 0 masks padded vocab rows
+    (Megatron-style padding) out of the partition function."""
+    dt = f_loc.dtype
+    f, w = ((_normalize(f_loc), _normalize(w_loc)) if cosine_scale > 0
+            else (f_loc, w_loc.astype(dt)))
+    logits = jnp.einsum("bd,vd->bv", f, w.astype(dt),
+                        preferred_element_type=jnp.float32)
+    if cosine_scale > 0:
+        logits = logits * cosine_scale
+    v_loc = w_loc.shape[0]
+    v_start = _flat_axis_index(model_axis) * v_loc
+    if n_valid:
+        col = v_start + jnp.arange(v_loc)
+        logits = jnp.where((col < n_valid)[None, :], logits, NEG_INF)
+    pos = (y_loc - v_start).astype(jnp.int32)
+    owned = (pos >= 0) & (pos < v_loc)
+    pos = jnp.clip(pos, 0, v_loc - 1)
+    return _finish_ce(logits, pos, owned, model_axis, tuple(batch_axes),
+                      1.0 / global_batch)
+
+
+def serve_logits_local(f_loc, w_loc, *, model_axis: str, n_valid: int = 0):
+    """Decode-time local logits [b, V_loc] + distributed argmax token ids.
+
+    Greedy sampling: each shard proposes (best val, global id); combined with
+    one pmax + one psum along "model"."""
+    logits = jnp.einsum("bd,vd->bv", f_loc, w_loc.astype(f_loc.dtype),
+                        preferred_element_type=jnp.float32)
+    if n_valid:
+        v_loc = w_loc.shape[0]
+        col = _flat_axis_index(model_axis) * v_loc + jnp.arange(v_loc)
+        logits = jnp.where((col < n_valid)[None, :], logits, NEG_INF)
+    amax = jnp.argmax(logits, axis=-1)
+    vmax = jnp.take_along_axis(logits, amax[:, None], axis=1)[:, 0]
+    gmax = jax.lax.pmax(vmax, model_axis)
+    shard_idx = _flat_axis_index(model_axis)
+    v_loc = w_loc.shape[0]
+    gid = shard_idx * v_loc + amax
+    # exactly-one winner: the lowest shard index among ties
+    is_best = vmax >= gmax
+    winner_shard = jax.lax.pmin(
+        jnp.where(is_best, shard_idx, jnp.iinfo(jnp.int32).max), model_axis)
+    mine = is_best & (shard_idx == winner_shard)
+    token = jax.lax.psum(jnp.where(mine, gid, 0), model_axis)
+    return token.astype(jnp.int32), logits

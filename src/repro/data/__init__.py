@@ -1,0 +1,9 @@
+from repro.data.synthetic import (
+    ClassificationStream,
+    lm_batch,
+    sku_feature_batch,
+    sku_image_batch,
+)
+
+__all__ = ["ClassificationStream", "lm_batch", "sku_feature_batch",
+           "sku_image_batch"]

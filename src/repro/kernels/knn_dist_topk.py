@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused cosine-score + running top-k' merge — the inner
+loop of the distributed KNN graph build (paper §3.2.2).
+
+Per ring hop, each device scores its local rows Q [Nq, D] against the
+traveling block K [Nk, D] and merges into a running top-k'. This kernel
+fuses the MXU matmul with the merge so the [Nq, Nk] score tile never leaves
+VMEM: grid = (q_blocks, n_blocks) with the n dimension innermost; a VMEM
+scratch carries (vals, ids) across the n sweep and flushes on the last tile.
+
+The merge is k' max-extraction sweeps over [bq, k' + bn] (k' static —
+unrolls onto the VPU; matmul tiles are 128-aligned for the MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -jnp.inf
+
+
+def _merge_sweep(vals, ids, k: int):
+    """Top-k of each row of (vals, ids) [bq, W] by k extraction sweeps."""
+    bq, w = vals.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bq, w), 1)
+    out_v = []
+    out_i = []
+    for i in range(k):
+        m = jnp.max(vals, axis=1)
+        am = jnp.argmax(vals, axis=1).astype(jnp.int32)
+        out_v.append(m)
+        out_i.append(jnp.take_along_axis(ids, am[:, None], axis=1)[:, 0])
+        vals = jnp.where(col == am[:, None], NEG, vals)
+    return jnp.stack(out_v, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _dist_topk_kernel(q_ref, k_ref, vals_ref, idx_ref, acc_v, acc_i, *,
+                      kprime: int, bn: int, n_valid: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_v[...] = jnp.full_like(acc_v, NEG)
+        acc_i[...] = jnp.full_like(acc_i, -1)
+
+    q = q_ref[...]                                # [bq, D]
+    kb = k_ref[...]                               # [bn, D]
+    scores = jax.lax.dot_general(
+        q, kb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # [bq, bn] MXU
+    ids = (j * bn + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1))
+    scores = jnp.where(ids < n_valid, scores, NEG)  # padded cols never win
+    cat_v = jnp.concatenate([acc_v[...], scores], axis=1)
+    cat_i = jnp.concatenate([acc_i[...], ids], axis=1)
+    new_v, new_i = _merge_sweep(cat_v, cat_i, kprime)
+    acc_v[...] = new_v
+    acc_i[...] = new_i
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        vals_ref[...] = acc_v[...]
+        idx_ref[...] = acc_i[...]
+
+
+def dist_topk(q: jax.Array, kmat: jax.Array, kprime: int, *,
+              block_q: int = 128, block_n: int = 128,
+              col_offset: int = 0, interpret: bool = True):
+    """q [Nq, D] x kmat [Nk, D] -> (vals [Nq, k'], ids [Nq, k'] global ids
+    offset by col_offset). Rows/cols padded to block multiples."""
+    nq, d = q.shape
+    nk = kmat.shape[0]
+    pq, pn = (-nq) % block_q, (-nk) % block_n
+    if pq:
+        q = jnp.pad(q, ((0, pq), (0, 0)))
+    if pn:
+        kmat = jnp.pad(kmat, ((0, pn), (0, 0)))  # masked inside the kernel
+    nq_p, nk_p = q.shape[0], kmat.shape[0]
+    grid = (nq_p // block_q, nk_p // block_n)
+    vals, idx = pl.pallas_call(
+        functools.partial(_dist_topk_kernel, kprime=kprime, bn=block_n,
+                          n_valid=nk),
+        out_shape=(jax.ShapeDtypeStruct((nq_p, kprime), jnp.float32),
+                   jax.ShapeDtypeStruct((nq_p, kprime), jnp.int32)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((block_n, d), lambda i, j: (j, 0))],
+        out_specs=(pl.BlockSpec((block_q, kprime), lambda i, j: (i, 0)),
+                   pl.BlockSpec((block_q, kprime), lambda i, j: (i, 0))),
+        scratch_shapes=[pltpu.VMEM((block_q, kprime), jnp.float32),
+                        pltpu.VMEM((block_q, kprime), jnp.int32)],
+        interpret=interpret,
+    )(q, kmat)
+    vals, idx = vals[:nq], idx[:nq]
+    real = (idx >= 0) & (idx < nk)
+    vals = jnp.where(real, vals, NEG)
+    idx = jnp.where(real, idx + col_offset, -1)
+    return vals, idx

@@ -1,0 +1,109 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only (TPU v5e is
+the compile target); on real TPU pass interpret=False (or set
+REPRO_PALLAS_INTERPRET=0).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ce_softmax as _ce
+from repro.kernels import knn_dist_topk as _dk
+from repro.kernels import topk_dc as _dc
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+# ---------------------------------------------------------------------------
+# divide-and-conquer top-k (paper Fig. 5)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "block_rows"))
+def topk_dc(x: jax.Array, k: int, *, chunk: int = 2048, block_rows: int = 8):
+    """Exact top-k of a flat tensor via chunked two-stage selection.
+    Returns (vals [k] desc, ids [k] int32 into x)."""
+    n = x.shape[0]
+    if n <= chunk:
+        vals, ids = jax.lax.top_k(x.astype(jnp.float32), min(k, n))
+        return vals, ids.astype(jnp.int32)
+    pad = (-n) % chunk
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad), constant_values=-jnp.inf)
+    chunks = xp.reshape(-1, chunk)
+    kk = min(k, chunk)
+    sub_v, sub_i = _dc.stage1_topk(chunks, kk, block_rows=block_rows,
+                                   interpret=INTERPRET)        # stage 1
+    base = (jnp.arange(chunks.shape[0], dtype=jnp.int32) * chunk)[:, None]
+    flat_v = sub_v.reshape(-1)
+    flat_i = (sub_i + base).reshape(-1)
+    vals, pos = jax.lax.top_k(flat_v, min(k, flat_v.shape[0]))  # stage 2
+    return vals, flat_i[pos]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "block_rows"))
+def topk_threshold(x_abs: jax.Array, k: int, *, chunk: int = 2048,
+                   block_rows: int = 8):
+    """k-th largest value (DGC threshold) via the d&c kernel."""
+    vals, _ = topk_dc(x_abs, k, chunk=chunk, block_rows=block_rows)
+    return vals[-1]
+
+
+# ---------------------------------------------------------------------------
+# fused distance + top-k' (graph build inner loop)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("kprime", "block_q", "block_n",
+                                             "col_offset"))
+def dist_topk(q: jax.Array, kmat: jax.Array, kprime: int, *,
+              block_q: int = 128, block_n: int = 128, col_offset: int = 0):
+    return _dk.dist_topk(q, kmat, kprime, block_q=block_q, block_n=block_n,
+                         col_offset=col_offset, interpret=INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# fused streaming softmax-CE (the paper's softmax stage)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_ce(f, w, y, scale: float = 1.0, block_v: int = 512):
+    """Mean CE of rows whose label is in-shard; [B,V] never materializes.
+    f [B,D], w [V,D], y [B] local ids (-1/out-of-range = not owned here)."""
+    m, z, corr = _ce.ce_forward(f, w, y, block_v=block_v, scale=scale,
+                                interpret=INTERPRET)
+    owned = (y >= 0) & (y < w.shape[0])
+    per = jnp.log(z) + m - jnp.where(owned, corr, 0.0)
+    return jnp.mean(per)
+
+
+def _fused_ce_fwd(f, w, y, scale, block_v):
+    m, z, corr = _ce.ce_forward(f, w, y, block_v=block_v, scale=scale,
+                                interpret=INTERPRET)
+    owned = (y >= 0) & (y < w.shape[0])
+    per = jnp.log(z) + m - jnp.where(owned, corr, 0.0)
+    return jnp.mean(per), (f, w, y, m, z)
+
+
+def _fused_ce_bwd(scale, block_v, res, g):
+    f, w, y, m, z = res
+    b = f.shape[0]
+    gv = jnp.full((b,), g / b, jnp.float32)
+    df, dw = _ce.ce_backward(f, w, y, m, z, gv, block_v=block_v, scale=scale,
+                             interpret=INTERPRET)
+    return df.astype(f.dtype), dw.astype(w.dtype), None
+
+
+fused_ce.defvjp(_fused_ce_fwd, _fused_ce_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_v"))
+def fused_ce_stats(f, w, y, *, scale: float = 1.0, block_v: int = 512):
+    """(m, z, corr) building blocks for the distributed (sharded) loss."""
+    return _ce.ce_forward(f, w, y, block_v=block_v, scale=scale,
+                          interpret=INTERPRET)

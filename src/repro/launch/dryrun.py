@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^^ MUST run before any jax import: the production meshes below need 512
+# placeholder host devices (2 pods x 16 x 16). See MULTI-POD DRY-RUN spec.
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input-shape) on
+the production meshes and record memory/cost/collective statistics.
+
+  single-pod : (16, 16)    ("data", "model")          256 chips
+  multi-pod  : (2, 16, 16) ("pod", "data", "model")   512 chips
+
+Per combo this lowers the step the shape dictates (train_step for train_4k,
+prefill_step for prefill_32k, serve_step for decode_32k / long_500k),
+compiles it, and appends a JSON line to the output file with:
+  - memory_analysis (argument/output/temp/peak bytes; per-device)
+  - cost_analysis flops / bytes accessed (per-device HLO program)
+  - per-collective byte counts parsed from the compiled HLO
+The roofline report (repro.roofline.analysis + EXPERIMENTS.md) reads this
+file. Failures are recorded with the exception text — a failure here is a
+sharding bug by definition.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --out dryrun_results.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma_2b --shape train_4k --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ARCH_IDS,
+    HeadConfig,
+    INPUT_SHAPES,
+    LONG_CONTEXT_SKIP,
+    TrainConfig,
+    for_shape,
+    get_model_config,
+    normalize_arch_id,
+    pad_vocab,
+)
+from repro.launch.mesh import make_parallel_config, make_production_mesh
+from repro.models import lm
+from repro.optim import make_optimizer
+from repro.roofline.hlo import analyze as hlo_analyze
+from repro.train import gspmd
+
+
+def _sds_tree(tree):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def _shardings_tree(mesh, pspec_tree):
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
+              use_knn: bool = False, remat: str = "full",
+              extra_rules: tuple = (), extra_param_rules: tuple = (),
+              fsdp: bool = True):
+    """Lower+compile one combo. Returns a result dict (raises on failure).
+
+    ``extra_rules`` / ``extra_param_rules`` PREPEND logical->mesh overrides
+    (first match wins) — the §Perf hillclimb's experiment knobs.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    par = make_parallel_config(multi_pod=multi_pod, remat=remat, fsdp=fsdp)
+    if extra_rules:
+        par = dataclasses.replace(par, rules=tuple(extra_rules) + par.rules)
+    if extra_param_rules:
+        base_pr = par.param_rules or par.rules
+        par = dataclasses.replace(
+            par, param_rules=tuple(extra_param_rules) + base_pr)
+    cfg = get_model_config(arch)
+    cfg = for_shape(cfg, shape)
+    cfg = pad_vocab(cfg, 128 * mesh.shape[par.model_axis] // 16)
+    hcfg = HeadConfig()
+    tcfg = TrainConfig(optimizer="sgd")  # momentum SGD: paper's optimizer
+
+    params_sds = jax.eval_shape(
+        lambda: lm.init_model(jax.random.PRNGKey(0), cfg))
+    if shape.mode != "train":
+        # serving runs on inference-dtype weights, not fp32 masters
+        inf_dt = jnp.dtype(cfg.dtype)
+        params_sds = jax.tree.map(
+            lambda l: (jax.ShapeDtypeStruct(l.shape, inf_dt)
+                       if l.dtype == jnp.float32 else l), params_sds)
+    pspecs = gspmd.param_pspecs(cfg, par)
+    pshard = _shardings_tree(mesh, pspecs)
+    input_sds = lm.input_specs(cfg, shape)
+    in_shard = _shardings_tree(mesh, gspmd.input_pspecs(cfg, shape, par))
+
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh):
+        if shape.mode == "train":
+            opt = make_optimizer(tcfg)
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            opt_shard = jax.tree.map(
+                lambda l: NamedSharding(mesh, P()), opt_sds)
+            # moments mirror param shardings
+            opt_shard = type(opt_sds)(
+                step=NamedSharding(mesh, P()),
+                mu=pshard, nu=pshard if opt_sds.nu is not None else None)
+            fn = gspmd.make_train_step(cfg, hcfg, par, tcfg, mesh, shape,
+                                       use_knn=use_knn)
+            args = (params_sds, opt_sds, input_sds,
+                    jax.ShapeDtypeStruct((), jnp.float32))
+            shardings = (pshard, opt_shard, in_shard, NamedSharding(mesh, P()))
+            if use_knn:
+                vocab_ax = par.mesh_axis_for("vocab") or par.model_axis
+                vax = (vocab_ax if isinstance(vocab_ax, tuple)
+                       else (vocab_ax,))
+                n_model = 1
+                for a in vax:
+                    n_model *= mesh.shape[a]
+                nnz_cap = cfg.vocab_size * hcfg.knn_k // n_model
+                graph_sds = (jax.ShapeDtypeStruct((n_model, cfg.vocab_size + 1),
+                                                  jnp.int32),
+                             jax.ShapeDtypeStruct((n_model, nnz_cap), jnp.int32),
+                             jax.ShapeDtypeStruct((n_model, nnz_cap), jnp.int32))
+                gspec = P(vocab_ax if isinstance(vocab_ax, tuple) else vocab_ax,
+                          None)
+                gshard = (NamedSharding(mesh, gspec),) * 3
+                args = args[:3] + (graph_sds,) + args[3:]
+                shardings = shardings[:3] + (gshard,) + shardings[3:]
+            lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+        elif shape.mode == "prefill":
+            fn = gspmd.make_prefill_step(cfg, par, mesh, shape)
+            lowered = jax.jit(fn, in_shardings=(pshard, in_shard)).lower(
+                params_sds, input_sds)
+        else:  # decode
+            caches_sds, slots_sds, window = lm.decode_state_specs(cfg, shape)
+            cache_specs, slot_specs = gspmd.cache_pspecs(cfg, par, shape)
+            cshard = _shardings_tree(mesh, cache_specs)
+            sshard = _shardings_tree(mesh, slot_specs)
+            tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            tok_shard = NamedSharding(
+                mesh, gspmd.fit_spec(gspmd.batch_pspec(par), tok_sds.shape, par))
+            fn = gspmd.make_serve_step(cfg, par, mesh, shape)
+            # serving donates the cache buffers (in-place rotation)
+            lowered = jax.jit(
+                fn, in_shardings=(pshard, cshard, sshard, tok_shard),
+                donate_argnums=(1, 2),
+            ).lower(params_sds, caches_sds, slots_sds, tok_sds)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = hlo_analyze(compiled.as_text())  # loop-aware (see roofline/hlo.py)
+    coll = hlo.collectives
+    n_params = sum(l.size for l in jax.tree.leaves(params_sds))
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode, "knn": use_knn,
+        "n_params": int(n_params),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "cost": {  # raw XLA numbers (loop bodies counted once — see hlo.py)
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        },
+        "hlo": {  # loop-corrected per-device totals
+            "flops": hlo.flops,
+            "bytes": hlo.bytes,
+        },
+        "collectives": coll,
+    }
+    return result
+
+
+def iter_combos(args):
+    archs = ([normalize_arch_id(args.arch)] if args.arch else ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape_name in shapes:
+            if shape_name == "long_500k" and arch in LONG_CONTEXT_SKIP:
+                continue  # enc-dec 448-ctx decoder: skip noted in DESIGN.md
+            for mp in meshes:
+                yield arch, shape_name, mp
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="")
+    p.add_argument("--shape", default="", choices=[""] + list(INPUT_SHAPES))
+    p.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    p.add_argument("--knn", action="store_true",
+                   help="lower the KNN-softmax train step variant")
+    p.add_argument("--remat", default="full", choices=["none", "full"])
+    p.add_argument("--out", default="dryrun_results.jsonl")
+    p.add_argument("--skip-done", action="store_true")
+    args = p.parse_args(argv)
+
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if "error" not in r:
+                    done.add((r["arch"], r["shape"], r["mesh"], r.get("knn", False)))
+
+    n_ok = n_fail = 0
+    with open(args.out, "a") as f:
+        for arch, shape_name, mp in iter_combos(args):
+            mesh_name = "2x16x16" if mp else "16x16"
+            if (arch, shape_name, mesh_name, args.knn) in done:
+                continue
+            tag = f"{arch} x {shape_name} x {mesh_name}" + \
+                  (" [knn]" if args.knn else "")
+            try:
+                res = lower_one(arch, shape_name, multi_pod=mp,
+                                use_knn=args.knn, remat=args.remat)
+                n_ok += 1
+                mem = res["memory"]
+                per_dev = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+                print(f"[dryrun] OK   {tag}: compile={res['compile_s']:.1f}s "
+                      f"flops={res['cost']['flops']:.3e} "
+                      f"arg+temp={per_dev:.2f} GiB/dev")
+            except Exception as e:  # noqa: BLE001 — record and continue
+                res = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "knn": args.knn, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                n_fail += 1
+                print(f"[dryrun] FAIL {tag}: {type(e).__name__}: {str(e)[:200]}")
+            f.write(json.dumps(res) + "\n")
+            f.flush()
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Production meshes. Defined as FUNCTIONS so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ParallelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_parallel_config(*, multi_pod: bool = False, remat: str = "full",
+                         fsdp: bool = True) -> ParallelConfig:
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    cfg = ParallelConfig(mesh_shape=shape, axis_names=axes, remat=remat)
+    if fsdp:
+        # ZeRO-3-flavored param sharding: weight embed dims over "data"
+        # (prepended -> takes precedence over the activation rules)
+        cfg = ParallelConfig(
+            mesh_shape=shape, axis_names=axes, remat=remat,
+            param_rules=(("embed", "data"),) + cfg.rules)
+    return cfg
+
+
+def make_host_mesh(n_data: int = 2, n_model: int = 4):
+    """Small CPU mesh for tests/examples on the fake-device host."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_host_parallel_config(n_data: int = 2, n_model: int = 4,
+                              remat: str = "none") -> ParallelConfig:
+    return ParallelConfig(mesh_shape=(n_data, n_model),
+                          axis_names=("data", "model"), remat=remat)

@@ -1,0 +1,1 @@
+from repro.models import decoder, encdec, layers, lm, moe, resnet, ssm  # noqa: F401

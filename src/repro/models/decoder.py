@@ -1,0 +1,291 @@
+"""Decoder-layer stack for dense / moe / vlm / ssm / hybrid families.
+
+Layers are homogeneous and SCANNED (params stacked on a leading ``layers``
+axis) to bound HLO size at 61 layers × 512 devices. ``lax.scan`` also stacks
+per-layer cache outputs for free during prefill.
+
+Cache layout (leaves stacked [L, ...] by the layer scan):
+  attn:   {"k": [B,W,Hk,Dh], "v": [B,W,Hk,Dh]}   (W = rotating window slots)
+  ssm:    {"ssm_state": [B,H,N,P] fp32, "conv_state": [B,K-1,Dxbc]}
+plus unstacked scalars: {"pos": int32 scalar, "pos_slots": [W] int32}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_attention,
+    apply_mlp,
+    apply_norm,
+    attention_axes,
+    init_attention,
+    init_mlp,
+    init_norm,
+    mlp_axes,
+    norm_axes,
+    project_kv,
+    rms_norm,
+)
+
+# ---------------------------------------------------------------------------
+# per-layer init / axes
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    fam = cfg.family
+    if fam == "ssm":
+        return {"ln1": init_norm(cfg), "ssm": ssm_lib.init_ssm(ks[0], cfg)}
+    p = {"ln1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+         "ln2": init_norm(cfg)}
+    if fam == "hybrid":
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg)
+        p["fuse_attn"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["fuse_ssm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["mlp"] = init_mlp(ks[2], cfg)
+    elif fam == "moe":
+        p["moe"] = moe_lib.init_moe(ks[2], cfg)
+    else:  # dense / vlm
+        p["mlp"] = init_mlp(ks[2], cfg)
+    return p
+
+
+def block_axes(cfg: ModelConfig):
+    fam = cfg.family
+    if fam == "ssm":
+        return {"ln1": norm_axes(cfg), "ssm": ssm_lib.ssm_axes(cfg)}
+    a = {"ln1": norm_axes(cfg), "attn": attention_axes(cfg), "ln2": norm_axes(cfg)}
+    if fam == "hybrid":
+        a["ssm"] = ssm_lib.ssm_axes(cfg)
+        a["fuse_attn"] = ("embed",)
+        a["fuse_ssm"] = ("embed",)
+        a["mlp"] = mlp_axes(cfg)
+    elif fam == "moe":
+        a["moe"] = moe_lib.moe_axes(cfg)
+    else:
+        a["mlp"] = mlp_axes(cfg)
+    return a
+
+
+def init_blocks(key, cfg: ModelConfig):
+    """Stacked layer params [n_layers, ...] via vmap over layer keys."""
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.vmap(lambda k: init_block(k, cfg))(keys)
+
+
+# ---------------------------------------------------------------------------
+# train / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def _mixer_forward(p, cfg: ModelConfig, x, positions, sharder):
+    """Sequence-mixing sublayer (attn / ssm / parallel attn+ssm).
+    Returns (mix_out, cache_out_dict)."""
+    fam = cfg.family
+    cache = {}
+    if fam == "ssm":
+        h = apply_norm(p["ln1"], x, cfg)
+        out, ssm_cache = ssm_lib.apply_ssm(p["ssm"], cfg, h)
+        cache.update(ssm_cache)
+        return out, cache
+    h = apply_norm(p["ln1"], x, cfg)
+    attn_out, kv = apply_attention(
+        p["attn"], cfg, h, positions=positions, causal=True,
+        window=cfg.sliding_window,
+    )
+    cache["k"], cache["v"] = kv
+    if fam == "hybrid":
+        ssm_out, ssm_cache = ssm_lib.apply_ssm(p["ssm"], cfg, h)
+        cache.update(ssm_cache)
+        out = 0.5 * (rms_norm(attn_out) * p["fuse_attn"].astype(x.dtype)
+                     + rms_norm(ssm_out) * p["fuse_ssm"].astype(x.dtype))
+        return out, cache
+    return attn_out, cache
+
+
+def _block_forward(p, cfg: ModelConfig, x, positions, sharder):
+    """Full block. Returns (x, aux, cache)."""
+    sharder = sharder or (lambda a, ax: a)
+    aux = jnp.zeros((), jnp.float32)
+    mix, cache = _mixer_forward(p, cfg, x, positions, sharder)
+    x = x + mix
+    x = sharder(x, ("batch", "seq", "embed"))
+    if cfg.family == "ssm":
+        return x, aux, cache
+    h = apply_norm(p["ln2"], x, cfg)
+    if cfg.family == "moe":
+        ff, aux = moe_lib.apply_moe(p["moe"], cfg, h, sharder=sharder)
+    else:
+        ff = apply_mlp(p["mlp"], cfg, h)
+    x = x + ff
+    x = sharder(x, ("batch", "seq", "embed"))
+    return x, aux, cache
+
+
+def apply_stack(blocks, cfg: ModelConfig, x, positions, *, sharder=None,
+                remat: str = "none", want_cache: bool = False,
+                cache_window: Optional[int] = None, param_sharder=None):
+    """Run the layer stack. Returns (x, aux_total, caches or None).
+
+    ``caches`` leaves are stacked [L, ...]; attention K/V are slot-compressed
+    to ``cache_window`` rotating slots when given. ``param_sharder``
+    re-constrains the per-layer param slice INSIDE the scan body (FSDP:
+    forces the data-axis all-gather to happen per layer, not hoisted).
+    """
+    fwd = functools.partial(_block_forward, cfg=cfg, positions=positions,
+                            sharder=sharder)
+
+    def body(carry, layer_p):
+        xc, aux = carry
+        if param_sharder is not None:
+            layer_p = param_sharder(layer_p)
+        xo, a, cache = fwd(layer_p, x=xc)
+        if not want_cache:
+            cache = None
+        elif cache_window is not None and "k" in cache:
+            cache["k"], cache["v"] = _compress_kv(
+                cache["k"], cache["v"], positions, cache_window)
+        return (xo, aux + a), cache
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux, caches
+
+
+def _compress_kv(k, v, positions, window):
+    """Keep the last min(S, window) entries, placed at slot pos % window."""
+    b, s, hk, dh = k.shape
+    w = min(s, window)
+    k_tail, v_tail = k[:, s - w:], v[:, s - w:]
+    if w == window and s >= window:
+        slots = positions[s - w:] % window
+        kc = jnp.zeros((b, window, hk, dh), k.dtype).at[:, slots].set(k_tail)
+        vc = jnp.zeros((b, window, hk, dh), v.dtype).at[:, slots].set(v_tail)
+        return kc, vc
+    pad = window - w
+    kc = jnp.pad(k_tail, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v_tail, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return kc, vc
+
+
+def init_cache_slots(cfg: ModelConfig, window: int, prefill_positions=None):
+    """pos / pos_slots bookkeeping shared by all layers."""
+    if prefill_positions is None:
+        return {"pos": jnp.zeros((), jnp.int32),
+                "pos_slots": jnp.full((window,), -1, jnp.int32)}
+    s = prefill_positions.shape[0]
+    w = min(s, window)
+    tail = prefill_positions[s - w:]
+    slots = jnp.full((window,), -1, jnp.int32)
+    slots = slots.at[tail % window].set(tail.astype(jnp.int32))
+    return {"pos": prefill_positions[-1].astype(jnp.int32) + 1,
+            "pos_slots": slots}
+
+
+# ---------------------------------------------------------------------------
+# decode (one token)
+# ---------------------------------------------------------------------------
+
+
+def _block_decode(p, cfg: ModelConfig, x, layer_cache, pos, pos_slots, slot):
+    """x: [B,1,D]. Returns (x, new_layer_cache)."""
+    fam = cfg.family
+    new_cache = {}
+    h = apply_norm(p["ln1"], x, cfg)
+    positions = pos[None]  # [1]
+    if fam == "ssm":
+        out, sc = ssm_lib.apply_ssm_step(p["ssm"], cfg, h, layer_cache)
+        return x + out, sc
+    # attention over the rotating cache
+    k_new, v_new = project_kv(p["attn"], cfg, h, positions)
+    kc = layer_cache["k"].at[:, slot].set(k_new[:, 0])
+    vc = layer_cache["v"].at[:, slot].set(v_new[:, 0])
+    new_slots = pos_slots.at[slot].set(pos)
+    attn_out, _ = apply_attention(
+        p["attn"], cfg, h, positions=positions, kv=(kc, vc),
+        kv_positions=new_slots, causal=True, window=cfg.sliding_window,
+    )
+    new_cache["k"], new_cache["v"] = kc, vc
+    if fam == "hybrid":
+        ssm_out, sc = ssm_lib.apply_ssm_step(
+            p["ssm"], cfg, h, {k: layer_cache[k] for k in ("ssm_state", "conv_state")})
+        new_cache.update(sc)
+        mix = 0.5 * (rms_norm(attn_out) * p["fuse_attn"].astype(x.dtype)
+                     + rms_norm(ssm_out) * p["fuse_ssm"].astype(x.dtype))
+    else:
+        mix = attn_out
+    x = x + mix
+    h2 = apply_norm(p["ln2"], x, cfg)
+    if fam == "moe":
+        ff, _ = moe_lib.apply_moe(p["moe"], cfg, h2)
+    else:
+        ff = apply_mlp(p["mlp"], cfg, h2)
+    return x + ff, new_cache
+
+
+def decode_stack(blocks, cfg: ModelConfig, x, caches, slots_state, *,
+                 window: int, param_sharder=None):
+    """One decode step through all layers.
+
+    caches: stacked [L, ...] pytree; slots_state: {"pos", "pos_slots"}.
+    Returns (x, new_caches, new_slots_state).
+    """
+    pos = slots_state["pos"]
+    pos_slots = slots_state["pos_slots"]
+    slot = pos % window
+
+    def body(xc, inp):
+        layer_p, layer_cache = inp
+        if param_sharder is not None:
+            layer_p = param_sharder(layer_p)
+        xo, new_cache = _block_decode(layer_p, cfg, xc, layer_cache, pos,
+                                      pos_slots, slot)
+        return xo, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (blocks, caches))
+    new_state = {"pos": pos + 1, "pos_slots": pos_slots.at[slot].set(pos)}
+    return x, new_caches, new_state
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, window: int, dtype):
+    """Fresh (empty) stacked cache for ``decode``-mode dry-runs/serving."""
+    fam = cfg.family
+    hk = cfg.n_kv_heads
+    dh = cfg.resolved_head_dim if fam != "ssm" else 0
+
+    def one_layer():
+        c = {}
+        if fam != "ssm":
+            c["k"] = jnp.zeros((batch, window, hk, dh), dtype)
+            c["v"] = jnp.zeros((batch, window, hk, dh), dtype)
+        if fam in ("ssm", "hybrid"):
+            c.update(ssm_lib.init_ssm_cache(cfg, batch, dtype))
+        return c
+
+    layer = one_layer()
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), layer)
+    return stacked
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes for stacked cache leaves (leading 'layers')."""
+    fam = cfg.family
+    c = {}
+    if fam != "ssm":
+        c["k"] = ("layers", "batch", "seq", "kv_heads", "head_dim")
+        c["v"] = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    if fam in ("ssm", "hybrid"):
+        sa = ssm_lib.ssm_cache_axes(cfg)
+        c["ssm_state"] = ("layers",) + sa["ssm_state"]
+        c["conv_state"] = ("layers",) + sa["conv_state"]
+    return c

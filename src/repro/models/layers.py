@@ -1,0 +1,399 @@
+"""Shared model primitives: norms, RoPE, GQA attention (qk-norm, sliding
+window, q-block-scanned flash-style softmax), gated MLPs, embeddings.
+
+Conventions
+-----------
+* Params are nested dicts of jnp arrays; every ``init_*`` has a matching
+  ``*_axes`` pytree of *logical axis names* used by the launcher to build
+  PartitionSpecs (MaxText-style logical->mesh rules in ParallelConfig).
+* Compute dtype is ``cfg.dtype`` (bf16 on TPU); reductions (softmax, norm
+  statistics, attention logits) run in fp32.
+* All sequence ops take absolute positions so the same code serves train,
+  prefill and rotating-buffer decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """LeCun-normal-ish fan-in init."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def _embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None):
+    dim = dim or cfg.d_model
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def norm_axes(cfg: ModelConfig):
+    a = {"scale": ("embed",)}
+    if cfg.norm == "layernorm":
+        a["bias"] = ("embed",)
+    return a
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(dt)
+
+
+def rms_norm(x, eps=1e-6):
+    """Scale-free RMS norm (used for qk-norm-less fusions)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(ms + eps)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, Dh]; positions: [..., S] absolute token positions."""
+    if theta <= 0:
+        return x
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(theta) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(length: int, dim: int):
+    """Whisper-style fixed sinusoidal embeddings [length, dim]."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+
+
+def init_attention(key, cfg: ModelConfig, dims: Optional[AttnDims] = None):
+    d = dims or AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (cfg.d_model, d.n_heads, d.head_dim), in_axis=0),
+        "wk": _dense_init(ks[1], (cfg.d_model, d.n_kv, d.head_dim), in_axis=0),
+        "wv": _dense_init(ks[2], (cfg.d_model, d.n_kv, d.head_dim), in_axis=0),
+        "wo": _dense_init(ks[3], (d.n_heads, d.head_dim, cfg.d_model), in_axis=1),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((d.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((d.head_dim,), jnp.float32)
+    return p
+
+
+def attention_axes(cfg: ModelConfig):
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        a["q_norm"] = ("head_dim",)
+        a["k_norm"] = ("head_dim",)
+    return a
+
+
+def _qk_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(ms + eps) * scale).astype(dt)
+
+
+def _attn_scores_block(q, k, q_pos, k_pos, scale, causal, window):
+    """q: [B,Hq,Sq,Dh] k: [B,Hk,T,Dh] (Hq multiple of Hk) -> probs fp32."""
+    b, hq, sq, dh = q.shape
+    hk = k.shape[1]
+    group = hq // hk
+    qg = q.reshape(b, hk, group, sq, dh)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    qp = q_pos[:, None]  # [Sq,1]
+    kp = k_pos[None, :]  # [1,T]
+    valid = kp >= 0
+    if causal:
+        valid &= kp <= qp
+    if window is not None and window > 0:
+        valid &= kp > qp - window
+    scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no valid key (can happen for padding) -> zeros, not NaN
+    probs = jnp.where(jnp.any(valid, axis=-1)[None, None, None, :, None], probs, 0.0)
+    return probs  # [B,Hk,G,Sq,T] fp32
+
+
+import os as _os
+
+# §Perf knob: store flash-attention probabilities in bf16 at XLA fusion
+# boundaries (the dominant HBM term of the pure-JAX flash path). Max/sum
+# statistics stay fp32; only the [qb, kvb] prob tile narrows.
+FLASH_PROBS_BF16 = _os.environ.get("REPRO_FLASH_PROBS_BF16", "0") == "1"
+
+
+def _flash_qblock(qg, kT, vT, qpos, k_positions, scale, causal, window,
+                  kv_block: int):
+    """Online-softmax over kv blocks for one q block.
+    qg: [B,Hk,G,qb,Dh]; kT/vT: [B,Hk,T,Dh]. Returns [B,Hk,G,qb,Dh] fp32."""
+    b, hk, g, qb, dh = qg.shape
+    t = kT.shape[2]
+    nkv = t // kv_block
+    assert t % kv_block == 0, f"T {t} % kv_block {kv_block} != 0"
+    kblocks = kT.reshape(b, hk, nkv, kv_block, dh).transpose(2, 0, 1, 3, 4)
+    vblocks = vT.reshape(b, hk, nkv, kv_block, dh).transpose(2, 0, 1, 3, 4)
+    pblocks = k_positions.reshape(nkv, kv_block)
+    qp = qpos[:, None]  # [qb, 1]
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, kp = inp
+        s = jnp.einsum("bkgsd,bktd->bkgst", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        valid = kp[None, :] >= 0
+        if causal:
+            valid &= kp[None, :] <= qp
+        if window is not None and window > 0:
+            valid &= kp[None, :] > qp - window
+        s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # rows still all-masked keep m=-inf; guard exp of (-inf) - (-inf)
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(jnp.where(valid[None, None, None], s - safe_m[..., None],
+                              -jnp.inf))
+        if FLASH_PROBS_BF16:
+            p = p.astype(jnp.bfloat16)  # narrow the HBM boundary tile
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+        l = l * corr + jnp.sum(p.astype(jnp.float32), axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,bktd->bkgsd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hk, g, qb), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hk, g, qb), jnp.float32)
+    a0 = jnp.zeros((b, hk, g, qb, dh), jnp.float32)
+    # checkpoint the kv step: the scan VJP must NOT save per-block prob
+    # tensors (that would re-materialize the full [Sq,T] matrix) — flash
+    # backward recomputes them per block instead.
+    step_ckpt = jax.checkpoint(step, prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(step_ckpt, (m0, l0, a0),
+                                  (kblocks, vblocks, pblocks))
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def multihead_attention(
+    q, k, v, *, q_positions, k_positions, causal=True, window=None,
+    q_block: int = 512, kv_block: int = 1024,
+):
+    """GQA attention over absolute positions.
+
+    q: [B,Sq,Hq,Dh]; k,v: [B,T,Hk,Dh]; q_positions [Sq]; k_positions [T]
+    (entries < 0 mark invalid cache slots).
+
+    Long sequences run a two-level flash scan (q blocks outer, kv blocks
+    inner, online softmax in fp32) so no [Sq,T] tensor ever materializes —
+    the pure-JAX analogue of the TPU flash kernel; short/decode paths score
+    directly.
+    """
+    b, sq, hq, dh = q.shape
+    t = k.shape[1]
+    hk = k.shape[2]
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qT = q.transpose(0, 2, 1, 3)          # [B,Hq,Sq,Dh]
+    kT = k.transpose(0, 2, 1, 3)          # [B,Hk,T,Dh]
+    vT = v.transpose(0, 2, 1, 3)
+
+    if sq * t <= q_block * kv_block * 2 or t % kv_block:
+        probs = _attn_scores_block(qT, kT, q_positions, k_positions, scale,
+                                   causal, window)
+        out = jnp.einsum("bkgst,bktd->bkgsd", probs.astype(v.dtype), vT,
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(b, hq, sq, dh)
+        return out.astype(q.dtype).transpose(0, 2, 1, 3)
+
+    g = hq // hk
+    qg4 = qT.reshape(b, hk, g, sq, dh)
+    if sq <= q_block:
+        out = _flash_qblock(qg4, kT, vT, q_positions, k_positions, scale,
+                            causal, window, kv_block)
+        out = out.reshape(b, hq, sq, dh)
+    else:
+        assert sq % q_block == 0, f"seq {sq} not divisible by q_block {q_block}"
+        nb = sq // q_block
+        qblocks = qg4.reshape(b, hk, g, nb, q_block, dh).transpose(
+            3, 0, 1, 2, 4, 5)
+        pblocks = q_positions.reshape(nb, q_block)
+
+        def step(_, inp):
+            qb_, pp = inp
+            return None, _flash_qblock(qb_, kT, vT, pp, k_positions, scale,
+                                       causal, window, kv_block)
+
+        _, outs = jax.lax.scan(step, None, (qblocks, pblocks))
+        # outs: [nb, B, Hk, G, qb, Dh] -> [B, Hq, Sq, Dh]
+        out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, sq, dh)
+    return out.astype(q.dtype).transpose(0, 2, 1, 3)  # [B,Sq,Hq,Dh]
+
+
+def project_kv(p, cfg: ModelConfig, x, positions):
+    """Project (and qk-norm + rope) K/V of x for self-attention/caching."""
+    dt = x.dtype
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        k = rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def apply_attention(
+    p, cfg: ModelConfig, x, *, positions, kv=None, kv_positions=None,
+    causal=True, window=None, dims: Optional[AttnDims] = None,
+):
+    """Full attention sublayer. ``kv``/(kv_positions) overrides K/V source:
+    - None: self-attention over x
+    - (k_cache, v_cache): pre-projected cache [B,T,Hk,Dh]
+    - {"x": enc_out}: cross-attention (project enc_out)
+    Returns (out [B,S,D], (k_new, v_new) projected K/V of x for cache updates).
+    """
+    d = dims or AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if isinstance(kv, dict):  # cross attention
+        src = kv["x"]
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(dt))
+        k_pos = kv_positions
+    elif kv is None:
+        k, v = project_kv(p, cfg, x, positions)
+        k_pos = positions
+    else:
+        k, v = kv  # pre-projected (and pre-roped) cache
+        k_pos = kv_positions
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        if isinstance(kv, dict):
+            k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0 and not isinstance(kv, dict):
+        q = rope(q, positions, cfg.rope_theta)
+    out = multihead_attention(
+        q, k, v, q_positions=positions, k_positions=k_pos,
+        causal=causal, window=window,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    if kv is None:
+        return out, (k, v)
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "wi_gate": _dense_init(ks[0], (cfg.d_model, d_ff), in_axis=0),
+            "wi_up": _dense_init(ks[1], (cfg.d_model, d_ff), in_axis=0),
+            "wo": _dense_init(ks[2], (d_ff, cfg.d_model), in_axis=0),
+        }
+    return {  # plain gelu MLP (whisper)
+        "wi": _dense_init(ks[0], (cfg.d_model, d_ff), in_axis=0),
+        "bi": jnp.zeros((d_ff,), jnp.float32),
+        "wo": _dense_init(ks[2], (d_ff, cfg.d_model), in_axis=0),
+        "bo": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def mlp_axes(cfg: ModelConfig):
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"wi_gate": ("embed", "mlp"), "wi_up": ("embed", "mlp"),
+                "wo": ("mlp", "embed")}
+    return {"wi": ("embed", "mlp"), "bi": ("mlp",),
+            "wo": ("mlp", "embed"), "bo": ("embed",)}
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    dt = x.dtype
+    if cfg.activation in ("swiglu", "geglu"):
+        g = x @ p["wi_gate"].astype(dt)
+        u = x @ p["wi_up"].astype(dt)
+        act = jax.nn.silu(g) if cfg.activation == "swiglu" else jax.nn.gelu(g)
+        return (act * u) @ p["wo"].astype(dt)
+    h = jax.nn.gelu(x @ p["wi"].astype(dt) + p["bi"].astype(dt))
+    return h @ p["wo"].astype(dt) + p["bo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ModelConfig):
+    return {"table": _embed_init(key, (cfg.vocab_size, cfg.d_model))}
+
+
+def embedding_axes(cfg: ModelConfig):
+    return {"table": ("vocab", "embed")}
+
+
+def apply_embedding(p, cfg: ModelConfig, tokens):
+    return jnp.take(p["table"].astype(jnp.dtype(cfg.dtype)), tokens, axis=0)

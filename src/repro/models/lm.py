@@ -1,0 +1,248 @@
+"""Model assembly: embedding + family backbone + (tied) classification head.
+
+This is the public model API the trainer / server / dry-run all use:
+
+  init_model(key, cfg)                  -> params
+  model_axes(cfg)                       -> logical-axis pytree (params)
+  backbone(params, cfg, inputs, ...)    -> (hidden [B,S,D], aux, caches)
+  head_weight(params, cfg)              -> W [V, D] (the extreme-classn head)
+  decode(params, cfg, inputs, caches, slots, window) -> (hidden, caches, slots)
+  input_example / input_specs           -> concrete / ShapeDtypeStruct inputs
+
+The head weight is consumed by ``repro.core`` (hybrid-parallel full/KNN/
+selective/MACH softmax) — the paper's technique is a head-side module shared
+by every architecture (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import decoder as dec_lib
+from repro.models import encdec as encdec_lib
+from repro.models import resnet as resnet_lib
+from repro.models.layers import (
+    _dense_init,
+    apply_embedding,
+    apply_norm,
+    embedding_axes,
+    init_embedding,
+    init_norm,
+    norm_axes,
+)
+
+# ---------------------------------------------------------------------------
+# init / axes
+# ---------------------------------------------------------------------------
+
+
+def init_model(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    if cfg.family == "feats":
+        # head-only mode: inputs are precomputed features (benchmarks that
+        # isolate the softmax stage, paper §4.1/§4.3 style)
+        return {"head": _dense_init(ks[1], (cfg.vocab_size, cfg.d_model),
+                                    in_axis=1)}
+    if cfg.family == "cnn":
+        p = {"trunk": resnet_lib.init_resnet(ks[0], cfg),
+             "head": _dense_init(ks[1], (cfg.vocab_size, cfg.d_model), in_axis=1)}
+        return p
+    p = {"embed": init_embedding(ks[0], cfg)}
+    if cfg.family == "encdec":
+        p["encdec"] = encdec_lib.init_encdec(ks[1], cfg)
+    else:
+        p["blocks"] = dec_lib.init_blocks(ks[1], cfg)
+        p["ln_f"] = init_norm(cfg)
+    if not cfg.tie_embeddings:
+        p["head"] = _dense_init(ks[2], (cfg.vocab_size, cfg.d_model), in_axis=1)
+    return p
+
+
+def _stack_axes(ax):
+    return jax.tree.map(lambda t: ("layers",) + t, ax,
+                        is_leaf=lambda t: isinstance(t, tuple))
+
+
+def model_axes(cfg: ModelConfig):
+    if cfg.family == "feats":
+        return {"head": ("vocab", "embed")}
+    if cfg.family == "cnn":
+        return {"trunk": None, "head": ("vocab", "embed")}
+    a = {"embed": embedding_axes(cfg)}
+    if cfg.family == "encdec":
+        a["encdec"] = encdec_lib.encdec_axes(cfg)
+    else:
+        a["blocks"] = _stack_axes(dec_lib.block_axes(cfg))
+        a["ln_f"] = norm_axes(cfg)
+    if not cfg.tie_embeddings:
+        a["head"] = ("vocab", "embed")
+    return a
+
+
+def head_weight(params, cfg: ModelConfig):
+    """The extreme-classification head W [V, D] (paper's 'big fc')."""
+    if cfg.family == "cnn" or not cfg.tie_embeddings:
+        return params["head"]
+    return params["embed"]["table"]
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def backbone(params, cfg: ModelConfig, inputs, *, sharder=None,
+             remat: str = "none", want_cache: bool = False,
+             cache_window: Optional[int] = None, param_sharder=None):
+    """-> (hidden [B,S,D], aux scalar, caches or None)."""
+    dt = jnp.dtype(cfg.dtype)
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family == "feats":
+        return inputs["features"].astype(dt)[:, None, :], zero, None
+    if cfg.family == "cnn":
+        feat = resnet_lib.apply_resnet(params["trunk"], cfg,
+                                       inputs["images"].astype(dt))
+        return feat, zero, None
+    if cfg.family == "encdec":
+        frames = inputs["frames"].astype(dt)
+        tokens = inputs["tokens"]
+        positions = jnp.arange(tokens.shape[1])
+        enc_out = encdec_lib.encode(params["encdec"], cfg, frames,
+                                    remat=remat)
+        emb = apply_embedding(params["embed"], cfg, tokens)
+        hidden, caches = encdec_lib.decode_train(
+            params["encdec"], cfg, emb, enc_out, positions,
+            want_cache=want_cache, remat=remat)
+        return hidden, zero, caches
+    tokens = inputs["tokens"]
+    positions = jnp.arange(tokens.shape[1])
+    x = apply_embedding(params["embed"], cfg, tokens)
+    if sharder is not None:
+        x = sharder(x, ("batch", "seq", "embed"))
+    win = cache_window or (cfg.sliding_window or tokens.shape[1])
+    x, aux, caches = dec_lib.apply_stack(
+        params["blocks"], cfg, x, positions, sharder=sharder, remat=remat,
+        want_cache=want_cache, cache_window=win if want_cache else None,
+        param_sharder=param_sharder)
+    x = apply_norm(params["ln_f"], x, cfg)
+    return x, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# decode (single token)
+# ---------------------------------------------------------------------------
+
+
+def decode(params, cfg: ModelConfig, inputs, caches, slots_state, *,
+           window: int, param_sharder=None):
+    """One-token decode. inputs: {"token": [B,1]}.
+    -> (hidden [B,1,D], new caches, new slots_state)."""
+    tok = inputs["token"]
+    x = apply_embedding(params["embed"], cfg, tok)
+    if cfg.family == "encdec":
+        x, caches, slots_state = encdec_lib.decode_step(
+            params["encdec"], cfg, x, caches, slots_state, window=window)
+        return x, caches, slots_state
+    x, caches, slots_state = dec_lib.decode_stack(
+        params["blocks"], cfg, x, caches, slots_state, window=window,
+        param_sharder=param_sharder)
+    x = apply_norm(params["ln_f"], x, cfg)
+    return x, caches, slots_state
+
+
+def decode_window(cfg: ModelConfig, seq_len: int) -> int:
+    """KV-cache slot count for a decode shape: full seq unless windowed."""
+    if cfg.family == "ssm":
+        return 1  # no KV cache at all (state only); window unused
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int):
+    """Fresh caches + slot bookkeeping for a decode-mode step at seq_len."""
+    dt = jnp.dtype(cfg.dtype)
+    window = decode_window(cfg, seq_len)
+    if cfg.family == "encdec":
+        caches = encdec_lib.init_encdec_decode_cache(cfg, batch, window, dt)
+    else:
+        caches = dec_lib.init_decode_cache(cfg, batch, window, dt)
+    slots = dec_lib.init_cache_slots(cfg, max(window, 1))
+    return caches, slots, window
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec_lib.encdec_cache_axes(cfg)
+    return dec_lib.cache_axes(cfg)
+
+
+# ---------------------------------------------------------------------------
+# inputs: concrete examples (smoke) and ShapeDtypeStructs (dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _token_shape(cfg: ModelConfig, shape: InputShape):
+    return (shape.global_batch, shape.seq_len)
+
+
+def input_example(cfg: ModelConfig, shape: InputShape, key=None):
+    """Concrete inputs for CPU smoke tests (reduced configs)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.mode == "decode":
+        return {"token": jax.random.randint(key, (b, 1), 0, cfg.vocab_size)}
+    if cfg.family == "cnn":
+        return {"images": jax.random.normal(key, (b, 32, 32, 3), dt),
+                "labels": jax.random.randint(key, (b,), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        k1, k2 = jax.random.split(key)
+        toks = jax.random.randint(k2, (b, s + 1), 0, cfg.vocab_size)
+        out = {"frames": jax.random.normal(k1, (b, cfg.enc_seq, cfg.d_model),
+                                           dt),
+               "tokens": toks[:, :s]}
+        if shape.mode == "train":
+            out["labels"] = toks[:, 1:]
+        return out
+    toks = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    out = {"tokens": toks[:, :s]}
+    if shape.mode == "train":
+        out["labels"] = toks[:, 1:]  # next-token targets
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStruct stand-ins (no allocation) for lower()/compile().
+
+    train/prefill: token (or image/frame) batch [+ labels for train].
+    decode: one token [B,1]; caches/slots come from ``decode_state_specs``.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    if shape.mode == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.family == "cnn":
+        specs = {"images": jax.ShapeDtypeStruct((b, 224, 224, 3), dt)}
+        if shape.mode == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b,), i32)
+        return specs
+    specs = {}
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), dt)
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    if shape.mode == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return specs
+
+
+def decode_state_specs(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStructs for (caches, slots_state) of a decode step."""
+    caches, slots, window = jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len)[:2]
+    ) + (decode_window(cfg, shape.seq_len),)
+    return caches, slots, window

@@ -1,0 +1,185 @@
+"""Token-choice top-k MoE with capacity-based sort dispatch + expert parallel.
+
+Dispatch is expressed with fixed shapes (sort + rank + scatter-with-drop) so
+it lowers cleanly under GSPMD: the [E, C, D] expert buffer is sharded on the
+expert axis over "model"; since token activations are replicated along
+"model", dispatch gathers are local and the combine is a single all-reduce —
+the TPU analogue of the all-to-all return path (DESIGN.md §2).
+
+Includes the standard load-balance auxiliary loss and optional shared
+(always-active) experts (Kimi-K2 / DeepSeek style).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+Sharder = Callable[[jax.Array, tuple], jax.Array]
+
+
+def _identity_sharder(x, axes):
+    return x
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (cfg.d_model, m.n_experts), in_axis=0),
+        "wi_gate": _dense_init(ks[1], (m.n_experts, cfg.d_model, m.d_ff), in_axis=1),
+        "wi_up": _dense_init(ks[2], (m.n_experts, cfg.d_model, m.d_ff), in_axis=1),
+        "wo": _dense_init(ks[3], (m.n_experts, m.d_ff, cfg.d_model), in_axis=1),
+    }
+    if m.n_shared_experts > 0:
+        d_sh = m.d_ff * m.n_shared_experts
+        sks = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi_gate": _dense_init(sks[0], (cfg.d_model, d_sh), in_axis=0),
+            "wi_up": _dense_init(sks[1], (cfg.d_model, d_sh), in_axis=0),
+            "wo": _dense_init(sks[2], (d_sh, cfg.d_model), in_axis=0),
+        }
+    return p
+
+
+def moe_axes(cfg: ModelConfig):
+    a = {
+        "router": ("embed", None),
+        "wi_gate": ("experts", "embed", "expert_mlp"),
+        "wi_up": ("experts", "embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.moe.n_shared_experts > 0:
+        a["shared"] = {"wi_gate": ("embed", "mlp"), "wi_up": ("embed", "mlp"),
+                       "wo": ("mlp", "embed")}
+    return a
+
+
+def capacity_for(n_tokens: int, cfg: ModelConfig,
+                 capacity_factor: Optional[float] = None) -> int:
+    m = cfg.moe
+    cf = capacity_factor if capacity_factor is not None else m.capacity_factor
+    c = int(n_tokens * m.top_k * cf / m.n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _dispatch_group(xg, top_i, top_p, cap: int, n_experts: int, k: int):
+    """Sort-based dispatch of ONE group (sequence). xg [t,d]; returns
+    (buf [E, cap, d], combine metadata)."""
+    t, d = xg.shape
+    flat_e = top_i.reshape(-1)                       # [t*k]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    rank = jnp.arange(t * k) - starts[sorted_e]      # position within expert
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_e * cap + rank, n_experts * cap)  # OOB drop
+    src_token = order // k
+    buf = jnp.zeros((n_experts * cap, d), xg.dtype)
+    buf = buf.at[dest].set(xg[src_token], mode="drop")
+    return buf.reshape(n_experts, cap, d), (dest, src_token, keep, order)
+
+
+def _combine_group(eo, meta, top_p, t: int, k: int):
+    """eo [E, cap, d] -> out [t, d] weighted scatter-add."""
+    dest, src_token, keep, order = meta
+    d = eo.shape[-1]
+    eo_flat = eo.reshape(-1, d)
+    back = jnp.where(keep[:, None],
+                     eo_flat[jnp.where(keep, dest, 0)], 0.0)
+    w = top_p.reshape(-1)[order]
+    out = jnp.zeros((t, d), jnp.float32).at[src_token].add(
+        back.astype(jnp.float32) * w[:, None])
+    return out
+
+
+def apply_moe(p, cfg: ModelConfig, x, *, sharder: Optional[Sharder] = None,
+              capacity_factor: Optional[float] = None):
+    """x: [B,S,D] -> (out [B,S,D], aux_loss scalar fp32).
+
+    GROUP-WISE dispatch (GShard/MaxText style): each batch row is its own
+    dispatch group, so sorts/ranks are vmapped per row and never cross the
+    batch sharding — under GSPMD the only cross-device traffic is the expert
+    GEMM's all-gather/reduce along the expert-sharded axis (the TPU analogue
+    of the all-to-all; DESIGN.md §2)."""
+    sharder = sharder or _identity_sharder
+    m = cfg.moe
+    b, s, d = x.shape
+    if s == 1 and b > 1:
+        # decode: per-sequence groups would pad every (token, expert) pair
+        # to the minimum capacity (E x cap slots PER TOKEN — catastrophic
+        # overcompute, found by the §Perf roofline). One global group.
+        out, aux = apply_moe(p, cfg, x.reshape(1, b, d), sharder=sharder,
+                             capacity_factor=capacity_factor)
+        return out.reshape(b, s, d), aux
+    k = m.top_k
+    dt_ = x.dtype
+
+    logits = (x @ p["router"].astype(dt_)).astype(jnp.float32)   # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                        # [B,S,k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))
+    onehot_counts = jnp.zeros((m.n_experts,), jnp.float32).at[
+        top_i.reshape(-1)].add(1.0)
+    fe = onehot_counts / (b * s * k)
+    aux = m.n_experts * jnp.sum(fe * me) * m.router_aux_coef
+
+    cap = capacity_for(s, cfg, capacity_factor)
+
+    buf, meta = jax.vmap(
+        lambda xg, ti, tp: _dispatch_group(xg, ti, tp, cap, m.n_experts, k)
+    )(x, top_i, top_p)                                # buf [B, E, cap, D]
+    buf = sharder(buf, ("batch", "experts", None, "embed"))
+
+    g = jnp.einsum("becd,edf->becf", buf, p["wi_gate"].astype(dt_))
+    u = jnp.einsum("becd,edf->becf", buf, p["wi_up"].astype(dt_))
+    act = jax.nn.silu(g) if cfg.activation == "swiglu" else jax.nn.gelu(g)
+    eo = jnp.einsum("becf,efd->becd", act * u, p["wo"].astype(dt_))
+    eo = sharder(eo, ("batch", "experts", None, "embed"))
+
+    out = jax.vmap(
+        lambda e, mt, tp: _combine_group(e, mt, tp, s, k)
+    )(eo, meta, top_p).astype(dt_)
+
+    if m.n_shared_experts > 0:
+        sp = p["shared"]
+        sg = x @ sp["wi_gate"].astype(dt_)
+        su = x @ sp["wi_up"].astype(dt_)
+        sact = jax.nn.silu(sg) if cfg.activation == "swiglu" else jax.nn.gelu(sg)
+        out = out + (sact * su) @ sp["wo"].astype(dt_)
+
+    return out, aux
+
+
+def moe_ref_dense(p, cfg: ModelConfig, x):
+    """Oracle: every token through its top-k experts via dense masking.
+    O(T*E) — test-scale only."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d).astype(jnp.float32)
+    logits = xf @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    gate = jnp.zeros((t, m.n_experts), jnp.float32)
+    gate = gate.at[jnp.arange(t)[:, None], top_i].set(top_p)
+    g = jnp.einsum("td,edf->tef", xf, p["wi_gate"].astype(jnp.float32))
+    u = jnp.einsum("td,edf->tef", xf, p["wi_up"].astype(jnp.float32))
+    act = jax.nn.silu(g) if cfg.activation == "swiglu" else jax.nn.gelu(g)
+    eo = jnp.einsum("tef,efd->ted", act * u, p["wo"].astype(jnp.float32))
+    out = jnp.einsum("ted,te->td", eo, gate)
+    if m.n_shared_experts > 0:
+        sp = p["shared"]
+        sg = xf @ sp["wi_gate"].astype(jnp.float32)
+        su = xf @ sp["wi_up"].astype(jnp.float32)
+        sact = jax.nn.silu(sg) if cfg.activation == "swiglu" else jax.nn.gelu(sg)
+        out = out + (sact * su) @ sp["wo"].astype(jnp.float32)
+    return out.reshape(b, s, d).astype(x.dtype)

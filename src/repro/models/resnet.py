@@ -1,0 +1,114 @@
+"""ResNet-v1.5-style CNN feature extractor — the paper's own FE trunk
+(ResNet-50, D=512 embedding). Implemented in JAX (not stubbed).
+
+BatchNorm -> GroupNorm adaptation (DESIGN.md §2): the paper's data-parallel
+trunk keeps BN in fp32 and syncs nothing across devices; GroupNorm gives the
+same "no cross-device batch statistics" property without train/eval mode
+state, which suits a pure-functional pjit trainer. The trunk is *data
+parallel* exactly as in the paper — every conv kernel's logical axes are
+replicated (None).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+STAGES_50 = ((64, 3), (128, 4), (256, 6), (512, 3))
+STAGES_REDUCED = ((32, 1), (64, 1))
+
+
+def stages_for(cfg: ModelConfig):
+    return STAGES_50 if cfg.n_layers >= 50 else STAGES_REDUCED
+
+
+def _conv_init(key, shape):
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape) / jnp.sqrt(fan_in / 2)
+
+
+def _gn_params(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def group_norm(p, x, groups=8, eps=1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xf = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    xf = xf.reshape(b, h, w, c)
+    return (xf * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def init_bottleneck(key, c_in, c_mid, stride):
+    ks = jax.random.split(key, 4)
+    c_out = c_mid * 4
+    p = {
+        "conv1": _conv_init(ks[0], (1, 1, c_in, c_mid)), "gn1": _gn_params(c_mid),
+        "conv2": _conv_init(ks[1], (3, 3, c_mid, c_mid)), "gn2": _gn_params(c_mid),
+        "conv3": _conv_init(ks[2], (1, 1, c_mid, c_out)), "gn3": _gn_params(c_out),
+    }
+    if stride != 1 or c_in != c_out:
+        p["proj"] = _conv_init(ks[3], (1, 1, c_in, c_out))
+        p["gn_proj"] = _gn_params(c_out)
+    return p
+
+
+def apply_bottleneck(p, x, stride):
+    h = jax.nn.relu(group_norm(p["gn1"], conv(x, p["conv1"])))
+    h = jax.nn.relu(group_norm(p["gn2"], conv(h, p["conv2"], stride)))
+    h = group_norm(p["gn3"], conv(h, p["conv3"]))
+    if "proj" in p:
+        x = group_norm(p["gn_proj"], conv(x, p["proj"], stride))
+    return jax.nn.relu(x + h)
+
+
+def init_resnet(key, cfg: ModelConfig):
+    stages = stages_for(cfg)
+    ks = jax.random.split(key, 2 + sum(n for _, n in stages))
+    p = {"stem": _conv_init(ks[0], (7, 7, 3, 64)), "gn_stem": _gn_params(64),
+         "blocks": [], "head_w": None}
+    c_in = 64
+    ki = 1
+    blocks = []
+    for si, (c_mid, n_blocks) in enumerate(stages):
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blocks.append(init_bottleneck(ks[ki], c_in, c_mid, stride))
+            c_in = c_mid * 4
+            ki += 1
+    p["blocks"] = blocks
+    p["head_w"] = jax.random.normal(ks[ki], (c_in, cfg.d_model)) / jnp.sqrt(c_in)
+    return p
+
+
+def resnet_axes(cfg: ModelConfig):
+    """Fully replicated (data-parallel trunk, as in the paper)."""
+    return None  # interpreted as replicate-all by the launcher
+
+
+def apply_resnet(p, cfg: ModelConfig, images):
+    """images: [B, H, W, 3] -> features [B, 1, d_model]."""
+    stages = stages_for(cfg)
+    dt = images.dtype
+    x = jax.nn.relu(group_norm(p["gn_stem"], conv(images, p["stem"], 2)))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    bi = 0
+    for si, (c_mid, n_blocks) in enumerate(stages):
+        for j in range(n_blocks):
+            stride = 2 if (si > 0 and j == 0) else 1
+            x = apply_bottleneck(p["blocks"][bi], x, stride)
+            bi += 1
+    feat = jnp.mean(x, axis=(1, 2))  # global average pool
+    feat = feat @ p["head_w"].astype(dt)
+    return feat[:, None, :]

@@ -1,0 +1,241 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk attention-like
+matmuls (MXU friendly) + an inter-chunk state recurrence via lax.scan, fp32
+state. Decode is the O(1) recurrent step over a carried (conv, ssm) cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    d_xbc = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, d_xbc
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, n_heads, d_xbc = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    return {
+        "in_proj": _dense_init(ks[0], (cfg.d_model, d_in_proj), in_axis=0),
+        "conv_w": _dense_init(ks[1], (s.d_conv, d_xbc), in_axis=0) * 0.1,
+        "conv_b": jnp.zeros((d_xbc,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, n_heads))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": _dense_init(ks[3], (d_inner, cfg.d_model), in_axis=0),
+    }
+
+
+def ssm_axes(cfg: ModelConfig):
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "dt_bias": ("heads",),
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "norm_scale": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssm
+    d_inner, n_heads, d_xbc = ssm_dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_xbc]
+    dt = zxbcdt[..., d_inner + d_xbc:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d. xbc: [B,S,C]; w: [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _segsum_cumsum(dtA_c):
+    """dtA_c: [b,nc,l,h] -> within-chunk inclusive cumsum [b,nc,l,h] (fp32)."""
+    return jnp.cumsum(dtA_c.astype(jnp.float32), axis=2)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk, init_state=None):
+    """Chunked SSD scan.
+
+    x: [b,s,h,p] dt: [b,s,h] (post-softplus, fp32) A: [h] (negative fp32)
+    B, C: [b,s,g,n] (g groups broadcast over heads)
+    Returns (y [b,s,h,p], final_state [b,h,n,p] fp32).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc, l = s // chunk, chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, l, h, p)
+    dtc = dt.reshape(b, nc, l, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, l, g, n)
+    Cc = C.reshape(b, nc, l, g, n)
+    dtA = dtc * A  # [b,nc,l,h] negative
+    cums = jnp.cumsum(dtA, axis=2)  # inclusive
+
+    # intra-chunk ("diagonal") term -------------------------------------
+    # L[i,j] = exp(cums_i - cums_j) for i>=j else 0
+    Ldec = jnp.exp(cums[:, :, :, None, :] - cums[:, :, None, :, :])  # [b,nc,i,j,h]
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    Ldec = jnp.where(tri[None, None, :, :, None], Ldec, 0.0)
+    CB = jnp.einsum("bclgn,bcmgn->bclmg", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    CB = jnp.repeat(CB, rep, axis=-1)  # [b,nc,i,j,h]
+    M = CB * Ldec
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # [b,nc,l,h,p]
+    y_diag = jnp.einsum("bclmh,bcmhp->bclhp", M, xdt)
+
+    # chunk-final states ---------------------------------------------------
+    decay_states = jnp.exp(cums[:, :, -1:, :] - cums)  # [b,nc,l,h]
+    Bh = jnp.repeat(Bc, rep, axis=3)  # [b,nc,l,h,n]
+    states = jnp.einsum(
+        "bclhn,bclh,bclhp->bchnp", Bh.astype(jnp.float32), decay_states * dtc, xc.astype(jnp.float32)
+    )  # [b,nc,h,n,p]
+
+    # inter-chunk recurrence ----------------------------------------------
+    chunk_decay = jnp.exp(cums[:, :, -1, :])  # [b,nc,h]
+    s0 = jnp.zeros((b, h, n, p), jnp.float32) if init_state is None else init_state
+
+    def step(prev, inp):
+        st, dec = inp  # [b,h,n,p], [b,h]
+        new = st + dec[:, :, None, None] * prev
+        return new, prev  # emit the state *entering* this chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [b,nc,h,n,p]
+
+    # inter-chunk ("off-diagonal") contribution ----------------------------
+    Ch = jnp.repeat(Cc, rep, axis=3)  # [b,nc,l,h,n]
+    y_off = jnp.einsum(
+        "bclhn,bclh,bchnp->bclhp", Ch.astype(jnp.float32), jnp.exp(cums), prev_states
+    )
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def apply_ssm(p, cfg: ModelConfig, x, init_state=None):
+    """Train/prefill forward. x: [B,S,D] -> (y [B,S,D], cache_out)."""
+    s_cfg = cfg.ssm
+    d_inner, n_heads, d_xbc = ssm_dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_)))
+    x_ssm = xbc[..., :d_inner]
+    B = xbc[..., d_inner:d_inner + s_cfg.n_groups * s_cfg.d_state]
+    C = xbc[..., d_inner + s_cfg.n_groups * s_cfg.d_state:]
+    b, s, _ = x.shape
+    B = B.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    C = C.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    xh = x_ssm.reshape(b, s, n_heads, s_cfg.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    # pad seq to a chunk multiple; padded steps get dt=0 (decay=1, no input)
+    # so they are exact no-ops on the state.
+    s_pad = -s % s_cfg.chunk
+    if s_pad:
+        xh = jnp.pad(xh, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, s_pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    y, state = ssd_chunked(xh, dt, A, B, C, s_cfg.chunk, init_state)
+    if s_pad:
+        y = y[:, :s]
+        xh = xh[:, :s]
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(dt_)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm_scale"]).astype(dt_)
+    out = y @ p["out_proj"].astype(dt_)
+    # conv tail for seamless decode continuation
+    conv_tail = _conv_tail_from_prefill(p, cfg, x)
+    return out, {"ssm_state": state, "conv_state": conv_tail}
+
+
+def _conv_tail_from_prefill(p, cfg, x):
+    """Last (d_conv-1) pre-conv xBC rows, for decode continuation."""
+    d_inner, _, d_xbc = ssm_dims(cfg)
+    k = cfg.ssm.d_conv
+    zxbcdt = x[:, -(k - 1):, :] @ p["in_proj"].astype(x.dtype)
+    _, xbc, _ = _split_in_proj(cfg, zxbcdt)
+    b = x.shape[0]
+    if xbc.shape[1] < k - 1:  # short prefill: left-pad zeros
+        padlen = k - 1 - xbc.shape[1]
+        xbc = jnp.concatenate([jnp.zeros((b, padlen, d_xbc), xbc.dtype), xbc], axis=1)
+    return xbc
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, n_heads, d_xbc = ssm_dims(cfg)
+    return {
+        "ssm_state": jnp.zeros((batch, n_heads, s.d_state, s.head_dim), jnp.float32),
+        "conv_state": jnp.zeros((batch, s.d_conv - 1, d_xbc), dtype),
+    }
+
+
+def ssm_cache_axes(cfg: ModelConfig):
+    return {"ssm_state": ("batch", "heads", None, None),
+            "conv_state": ("batch", None, "inner")}
+
+
+def apply_ssm_step(p, cfg: ModelConfig, x, cache):
+    """Single-token decode. x: [B,1,D] -> (y [B,1,D], new cache)."""
+    s_cfg = cfg.ssm
+    d_inner, n_heads, d_xbc = ssm_dims(cfg)
+    dt_ = x.dtype
+    b = x.shape[0]
+    zxbcdt = x[:, 0, :] @ p["in_proj"].astype(dt_)  # [B, ...]
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    window = jnp.concatenate([cache["conv_state"], xbc[:, None, :]], axis=1)  # [B,K,dxbc]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(dt_)) + p["conv_b"].astype(dt_)
+    xbc_t = jax.nn.silu(conv_out)
+    x_ssm = xbc_t[..., :d_inner]
+    B = xbc_t[..., d_inner:d_inner + s_cfg.n_groups * s_cfg.d_state]
+    C = xbc_t[..., d_inner + s_cfg.n_groups * s_cfg.d_state:]
+    B = B.reshape(b, s_cfg.n_groups, s_cfg.d_state)
+    C = C.reshape(b, s_cfg.n_groups, s_cfg.d_state)
+    rep = n_heads // s_cfg.n_groups
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)  # [B,H,N]
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    xh = x_ssm.reshape(b, n_heads, s_cfg.head_dim).astype(jnp.float32)  # [B,H,P]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])  # [H]
+    decay = jnp.exp(dt * A)  # [B,H]
+    state = cache["ssm_state"]  # [B,H,N,P] fp32
+    state = decay[:, :, None, None] * state + jnp.einsum(
+        "bhn,bh,bhp->bhnp", Bh, dt, xh
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state) + p["D"][None, :, None] * xh
+    y = y.reshape(b, d_inner).astype(dt_)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm_scale"]).astype(dt_)
+    out = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    new_cache = {"ssm_state": state, "conv_state": window[:, 1:, :]}
+    return out, new_cache

@@ -1,0 +1,16 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    adam,
+    apply_updates,
+    lars,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.scale import LossScaleState, dynamic_loss_scale, scaled_grads
+
+__all__ = [
+    "Optimizer", "OptState", "adam", "apply_updates", "lars",
+    "make_optimizer", "sgd", "LossScaleState", "dynamic_loss_scale",
+    "scaled_grads",
+]

@@ -1,0 +1,128 @@
+"""Minimal functional optimizers (no optax in this environment).
+
+API (optax-flavored):
+    opt = sgd(momentum=0.9) | lars(...) | adam(...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, lr)
+    params = apply_updates(params, updates)
+
+All states are fp32 (the paper's master-copy discipline); ``lr`` is a traced
+scalar so FCCS can drive it per step without recompilation.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params, lr) -> (updates, state)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any            # first moment / momentum
+    nu: Any = None     # second moment (adam only)
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def _wd(g, p, weight_decay):
+    g = g.astype(jnp.float32)
+    if weight_decay:
+        g = g + weight_decay * p.astype(jnp.float32)
+    return g
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=_zeros_like_tree(params))
+
+    def update(grads, state, params, lr):
+        mu = jax.tree.map(
+            lambda g, m, p: momentum * m + _wd(g, p, weight_decay),
+            grads, state.mu, params)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda g, m, p: -lr * (_wd(g, p, weight_decay) + momentum * m),
+                grads, mu, params)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, mu)
+        return upd, OptState(step=state.step + 1, mu=mu)
+
+    return Optimizer(init, update)
+
+
+def lars(momentum: float = 0.9, weight_decay: float = 1e-4,
+         trust_coef: float = 0.001, eps: float = 1e-9) -> Optimizer:
+    """LARS [You et al. '17] — the paper's FCCS local policy (§3.4).
+    Per-leaf trust ratio: lr_local = trust * ||w|| / (||g|| + wd*||w||)."""
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=_zeros_like_tree(params))
+
+    def update(grads, state, params, lr):
+        def new_m(g, m, p):
+            g = _wd(g, p, weight_decay)
+            pf = p.astype(jnp.float32)
+            wn = jnp.linalg.norm(pf)
+            gn = jnp.linalg.norm(g)
+            trust = jnp.where((wn > 0) & (gn > 0),
+                              trust_coef * wn / (gn + eps), 1.0)
+            return momentum * m + (lr * trust) * g
+
+        mu = jax.tree.map(new_m, grads, state.mu, params)
+        upd = jax.tree.map(lambda m: -m, mu)
+        return upd, OptState(step=state.step + 1, mu=mu)
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=_zeros_like_tree(params),
+                        nu=_zeros_like_tree(params))
+
+    def update(grads, state, params, lr):
+        t = state.step + 1
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+        mu = jax.tree.map(
+            lambda g, m, p: b1 * m + (1 - b1) * _wd(g, p, weight_decay),
+            grads, state.mu, params)
+        nu = jax.tree.map(
+            lambda g, v, p: b2 * v + (1 - b2) * jnp.square(_wd(g, p, weight_decay)),
+            grads, state.nu, params)
+        upd = jax.tree.map(
+            lambda m, v: -lr * (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu)
+        return upd, OptState(step=t, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer == "sgd":
+        return sgd(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+    if cfg.optimizer == "lars":
+        return lars(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+    if cfg.optimizer == "adam":
+        return adam(weight_decay=cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

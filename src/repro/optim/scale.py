@@ -1,0 +1,54 @@
+"""Mixed-precision loss scaling (paper §3.1 / Micikevicius et al.).
+
+bf16 on TPU does not *require* scaling (fp32 exponent range) but the paper's
+fp16 recipe is implemented faithfully and selectable: static scaling
+(loss_scale > 0) and dynamic scaling (loss_scale < 0 -> |value| is the
+initial scale; grows 2x every ``growth_interval`` good steps, halves on
+non-finite grads, skipping that update).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LossScaleState(NamedTuple):
+    scale: jax.Array          # fp32 scalar
+    good_steps: jax.Array     # int32
+
+
+def init_loss_scale(initial: float) -> LossScaleState:
+    return LossScaleState(scale=jnp.asarray(abs(initial), jnp.float32),
+                          good_steps=jnp.zeros((), jnp.int32))
+
+
+def scaled_grads(loss_fn, params, *args, scale: jax.Array):
+    """value_and_grad of ``scale * loss``; grads returned unscaled + finite
+    flag. loss_fn must return (loss, aux)."""
+    def scaled(p, *a):
+        loss, aux = loss_fn(p, *a)
+        return loss * scale, (loss, aux)
+
+    (_, (loss, aux)), grads = jax.value_and_grad(scaled, has_aux=True)(
+        params, *args)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) / scale, grads)
+    finite = jnp.all(jnp.stack([
+        jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads)]))
+    return (loss, aux), grads, finite
+
+
+def dynamic_loss_scale(state: LossScaleState, finite: jax.Array, *,
+                       growth_interval: int = 200, factor: float = 2.0,
+                       min_scale: float = 1.0, max_scale: float = 2.0 ** 24):
+    """Post-step scale adjustment. Returns (new_state, apply_update_flag)."""
+    grown = jnp.where(
+        (state.good_steps + 1) >= growth_interval,
+        jnp.minimum(state.scale * factor, max_scale), state.scale)
+    good = jnp.where((state.good_steps + 1) >= growth_interval,
+                     0, state.good_steps + 1)
+    new_scale = jnp.where(finite, grown,
+                          jnp.maximum(state.scale / factor, min_scale))
+    new_good = jnp.where(finite, good, 0)
+    return LossScaleState(scale=new_scale, good_steps=new_good), finite

@@ -1,0 +1,336 @@
+"""Loop-aware analysis of compiled (SPMD, per-device) HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE regardless of
+trip count (verified on this toolchain: scan(4) and scan(8) of the same
+matmul report identical flops), which under-counts scanned layers,
+micro-batches and flash-attention block loops by orders of magnitude. This
+module re-derives per-device statistics by parsing the HLO module, building
+the computation call graph, and multiplying through
+``backend_config={"known_trip_count": ...}``:
+
+  * flops        — dot/convolution contractions (elementwise excluded; for
+                   these models matmuls are >98% of compute)
+  * bytes        — operand+output sizes of top-level (post-fusion) ops, the
+                   same HBM-traffic proxy cost_analysis uses
+  * collectives  — per-kind {bytes, count}, loop-multiplied
+
+Raw cost_analysis numbers are still recorded by the dry-run for reference.
+"""
+from __future__ import annotations
+
+import re
+from functools import lru_cache
+from typing import Dict, List, NamedTuple, Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*{\s*$")
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count\D+(\d+)')
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|calls|to_apply|condition|branch_computations)=\s*"
+    r"(?:\{([^}]*)\}|%?([\w.\-]+))")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems_bytes(type_str: str):
+    """All array shapes in a (possibly tuple) type string -> total bytes."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Op(NamedTuple):
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: List[str]
+    calls: List[str]
+    trip: int
+
+
+class Module(NamedTuple):
+    computations: Dict[str, List[Op]]
+    entry: str
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+# Ops that touch only a window of their big operand: charge 2x output
+# (read slice + write) like XLA's cost analysis, NOT the full operand —
+# otherwise every scan iteration is billed the whole stacked tensor.
+_SLICE_LIKE = {"slice", "dynamic-slice", "gather"}
+# Write a window into a big buffer: charge 2x the update operand.
+_UPDATE_LIKE = {"dynamic-update-slice", "scatter", "select-and-scatter"}
+# Read small, write big: charge output only.
+_EXPAND_LIKE = {"broadcast", "pad"}
+
+
+def parse_module(text: str) -> Module:
+    comps: Dict[str, List[Op]] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and line.strip().endswith("{"):
+            cur = hdr.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_HEAD_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1)
+        rest = line[m.end():]
+        # result type: either a balanced-paren tuple (may contain /*index=N*/
+        # comments!) or a single shape token
+        if rest.startswith("("):
+            depth = 0
+            ti = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        ti = i
+                        break
+            type_str = rest[:ti + 1]
+            rest = rest[ti + 1:]
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                continue
+            type_str = rest[:sp]
+            rest = rest[sp:]
+        m2 = _OPCODE_RE.match(rest)
+        if not m2:
+            continue
+        opcode = m2.group(1)
+        # operand names: inside the first balanced parens after the opcode
+        paren = rest[m2.end() - 1:]
+        depth = 0
+        end = 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = paren[:end + 1]
+        operands = _OPERAND_RE.findall(operand_str)
+        attrs = paren[end:]
+        calls = []
+        for g1, g2 in _CALL_ATTR_RE.findall(attrs):
+            if g1:
+                calls += _OPERAND_RE.findall(g1)
+            elif g2:
+                calls.append(g2)
+        trip = 1
+        tm = _TRIP_RE.search(line)
+        if tm:
+            trip = int(tm.group(1))
+        comps[cur].append(Op(name, type_str, opcode, line, operands, calls,
+                             trip))
+    return Module(comps, entry)
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    out_dims = _shape_dims(op.type_str)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    cm = _CDIMS_RE.search(op.line)
+    contract = 1
+    if cm and op.operands:
+        lhs_type = symtab.get(op.operands[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_n * contract
+
+
+def _conv_flops(op: Op, symtab: Dict[str, str]) -> float:
+    out_dims = _shape_dims(op.type_str)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    if len(op.operands) < 2:
+        return 0.0
+    k_dims = _shape_dims(symtab.get(op.operands[1], ""))
+    if not k_dims:
+        return 0.0
+    k_n = 1
+    for d in k_dims:
+        k_n *= d
+    # kernel = spatial x in_ch x out_ch; out features appear in out_n too:
+    # flops ~= 2 * out_n * (kernel_elems / out_features). Use the smallest
+    # plausible feature dim as out_features.
+    out_feat = min(k_dims)
+    return 2.0 * out_n * (k_n / max(out_feat, 1))
+
+
+class Analysis(NamedTuple):
+    flops: float
+    bytes: float
+    collectives: dict
+
+
+_PARAM_NUM_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_operand_bytes(mod: Module, op: Op, symtab: Dict[str, str]) -> float:
+    """HBM bytes read by a fusion: per operand, if every consumer of the
+    corresponding fused parameter is slice-like, charge the consumers'
+    output sizes (XLA only reads the window); otherwise the full operand."""
+    total = 0.0
+    comp = mod.computations.get(op.calls[0], []) if op.calls else []
+    params = {}
+    consumers: Dict[str, List[Op]] = {}
+    for fop in comp:
+        if fop.opcode == "parameter":
+            m = _PARAM_NUM_RE.search(fop.line)
+            if m:
+                params[int(m.group(1))] = fop.name
+        for o in fop.operands:
+            consumers.setdefault(o, []).append(fop)
+    for i, operand in enumerate(op.operands):
+        full = _shape_elems_bytes(symtab.get(operand, ""))
+        pname = params.get(i)
+        cons = consumers.get(pname, []) if pname else []
+        if cons and all(c.opcode in _SLICE_LIKE for c in cons):
+            total += sum(_shape_elems_bytes(c.type_str) for c in cons)
+        else:
+            total += full
+    return total
+
+
+def analyze(text: str) -> Analysis:
+    mod = parse_module(text)
+
+    memo: Dict[str, Analysis] = {}
+
+    def comp_analysis(cname: str) -> Analysis:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = Analysis(0.0, 0.0, {})  # cycle guard
+        ops = mod.computations.get(cname, [])
+        symtab = {op.name: op.type_str for op in ops}
+        flops = 0.0
+        nbytes = 0.0
+        coll = {k: {"bytes": 0.0, "count": 0.0} for k in COLLECTIVE_KINDS}
+        for op in ops:
+            kind = op.opcode
+            mult = op.trip if kind == "while" else 1
+            # recurse into called computations (while/fusion/call/cond)
+            sub_f = sub_b = 0.0
+            sub_c = None
+            if op.calls and kind not in ("all-reduce", "reduce-scatter"):
+                for c in op.calls:
+                    a = comp_analysis(c)
+                    sub_f += a.flops
+                    sub_b += a.bytes
+                    if sub_c is None:
+                        sub_c = {k: dict(v) for k, v in a.collectives.items()}
+                    else:
+                        for k in COLLECTIVE_KINDS:
+                            sub_c[k]["bytes"] += a.collectives[k]["bytes"]
+                            sub_c[k]["count"] += a.collectives[k]["count"]
+            if kind == "fusion":
+                # flops inside the fused computation count; bytes only at
+                # the fusion boundary, windowed reads charged as windows
+                flops += sub_f
+                nbytes += (_shape_elems_bytes(op.type_str)
+                           + _fusion_operand_bytes(mod, op, symtab))
+                continue
+            if kind == "while":
+                flops += mult * sub_f
+                nbytes += mult * sub_b
+                if sub_c:
+                    for k in COLLECTIVE_KINDS:
+                        coll[k]["bytes"] += mult * sub_c[k]["bytes"]
+                        coll[k]["count"] += mult * sub_c[k]["count"]
+                continue
+            if kind in ("call", "conditional", "custom-call"):
+                flops += sub_f
+                nbytes += sub_b
+                if sub_c:
+                    for k in COLLECTIVE_KINDS:
+                        coll[k]["bytes"] += sub_c[k]["bytes"]
+                        coll[k]["count"] += sub_c[k]["count"]
+                # fall through to count own boundary bytes for custom-call
+                if kind != "custom-call":
+                    continue
+            base = kind.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVE_KINDS:
+                if kind.endswith("-done"):
+                    continue
+                b = _shape_elems_bytes(op.type_str)
+                coll[base]["bytes"] += b
+                coll[base]["count"] += 1
+                nbytes += b
+                continue
+            if kind == "dot":
+                flops += _dot_flops(op, symtab)
+            elif kind == "convolution":
+                flops += _conv_flops(op, symtab)
+            if kind in _SKIP_BYTES:
+                continue
+            if kind in _SLICE_LIKE:
+                nbytes += 2 * _shape_elems_bytes(op.type_str)
+            elif kind in _UPDATE_LIKE:
+                upd = (_shape_elems_bytes(symtab.get(op.operands[1], ""))
+                       if len(op.operands) > 1 else
+                       _shape_elems_bytes(op.type_str))
+                nbytes += 2 * min(upd, _shape_elems_bytes(op.type_str))
+            elif kind in _EXPAND_LIKE:
+                nbytes += _shape_elems_bytes(op.type_str)
+            else:
+                nbytes += _shape_elems_bytes(op.type_str) + sum(
+                    _shape_elems_bytes(symtab.get(o, "")) for o in op.operands)
+        memo[cname] = Analysis(flops, nbytes, coll)
+        return memo[cname]
+
+    a = comp_analysis(mod.entry)
+    coll = {k: {"bytes": v["bytes"], "count": v["count"]}
+            for k, v in a.collectives.items()}
+    coll["total_bytes"] = sum(v["bytes"] for k, v in a.collectives.items())
+    return Analysis(a.flops, a.bytes, coll)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Loop-aware per-kind collective accounting (back-compat wrapper)."""
+    return analyze(hlo_text).collectives

@@ -1,0 +1,2 @@
+from repro.train import gspmd, hybrid  # noqa: F401
+from repro.train.trainer import PaperTrainer  # noqa: F401

@@ -1,0 +1,366 @@
+"""GSPMD trainer/server for the architecture zoo (beyond-paper scale-out).
+
+The paper's trunk (ResNet-50) replicates on every device; the assigned zoo
+includes 1T-param MoEs that cannot, so the trunk here is tensor/expert-
+parallel over "model" (+ FSDP over "data" for the big configs) via logical-
+axis rules, while the *head keeps the paper's explicit hybrid-parallel
+algorithm* — a shard_map over "model" with the same pmax/psum distributed
+softmax used by the faithful trainer. Batch is sharded over ("pod","data").
+
+Provides the three step builders the dry-run lowers for every
+(arch × input-shape): train_step, prefill_step, serve_step (one decode token
+through the KV/SSM cache + sharded-vocab argmax).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (
+    HeadConfig,
+    InputShape,
+    ModelConfig,
+    ParallelConfig,
+    TrainConfig,
+    effective_vocab,
+)
+from repro.core.knn_softmax import knn_softmax_local
+from repro.core.sharded_softmax import full_softmax_local, serve_logits_local
+from repro.models import lm
+from repro.optim import apply_updates, make_optimizer
+
+FULL_METRICS = {"accuracy": P(), "logz": P()}
+KNN_METRICS = {**FULL_METRICS, "active_frac": P(), "label_recall": P()}
+
+
+# ---------------------------------------------------------------------------
+# logical axes -> PartitionSpecs
+# ---------------------------------------------------------------------------
+
+
+def pspec_of(axes: Optional[tuple], par: ParallelConfig) -> P:
+    if axes is None:
+        return P()
+    return P(*(par.mesh_axis_for(a) if a is not None else None for a in axes))
+
+
+def _mesh_sizes(par: ParallelConfig):
+    return dict(zip(par.axis_names, par.mesh_shape))
+
+
+def _entry_size(entry, sizes) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(entry, 1)
+
+
+def fit_spec(spec: P, shape, par: ParallelConfig) -> P:
+    """Drop mesh axes on dims they don't divide (MQA kv=1, batch=1, 3 heads
+    on a 4-way axis, ...) — the dim falls back to replicated. Also drops a
+    mesh axis that already appeared on an earlier dim (FSDP rules can collide
+    with TP rules on some tensors)."""
+    sizes = _mesh_sizes(par)
+    used: set = set()
+    out = []
+    for i, entry in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        names = (entry,) if isinstance(entry, str) else (entry or ())
+        if any(a in used for a in names):
+            out.append(None)
+            continue
+        n = _entry_size(entry, sizes)
+        keep = entry if (n == 1 or shape[i] % n == 0) else None
+        if keep is not None:
+            used.update((keep,) if isinstance(keep, str) else keep)
+        out.append(keep)
+    return P(*out)
+
+
+def _pspec_of_param(axes: Optional[tuple], par: ParallelConfig) -> P:
+    if axes is None:
+        return P()
+    return P(*(par.mesh_axis_for_param(a) if a is not None else None
+               for a in axes))
+
+
+def param_pspecs(model_cfg: ModelConfig, par: ParallelConfig):
+    """Parameter PartitionSpecs via par.param_rules (FSDP-aware)."""
+    axes = lm.model_axes(model_cfg)
+    params_shape = jax.eval_shape(
+        lambda: lm.init_model(jax.random.PRNGKey(0), model_cfg))
+
+    def walk(ax, shape_tree):
+        if ax is None or isinstance(ax, tuple):
+            base = ax if isinstance(ax, tuple) else None
+            return jax.tree.map(
+                lambda leaf: fit_spec(_pspec_of_param(base, par), leaf.shape,
+                                      par),
+                shape_tree)
+        return {k: walk(ax.get(k), shape_tree[k]) for k in shape_tree}
+
+    return walk(axes, params_shape)
+
+
+def param_shardings(model_cfg: ModelConfig, par: ParallelConfig, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(model_cfg, par),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_sharder(mesh, par: ParallelConfig):
+    def sharder(x, axes):
+        spec = fit_spec(pspec_of(axes, par), x.shape, par)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return sharder
+
+
+def make_layer_param_sharder(model_cfg: ModelConfig, par: ParallelConfig,
+                             mesh):
+    """In-scan-body constraint on the per-layer param slice: TP sharding
+    only (activation rules, no FSDP axis). When params are FSDP-sharded this
+    forces GSPMD to all-gather each layer's weights inside the loop body
+    instead of hoisting a whole-stack gather (per-layer working set).
+    Returns None when FSDP is off (constraint would be a no-op)."""
+    if par.param_rules is None:
+        return None
+    from repro.models import decoder as dec_lib
+    if model_cfg.family in ("cnn", "feats", "encdec"):
+        return None
+    axes_tree = dec_lib.block_axes(model_cfg)
+
+    def shard_layer(layer_p):
+        def one(ax, leaf):
+            spec = fit_spec(pspec_of(ax, par), leaf.shape, par)
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, spec))
+        return jax.tree.map(one, axes_tree, layer_p,
+                            is_leaf=lambda t: isinstance(t, tuple))
+
+    return shard_layer
+
+
+def batch_pspec(par: ParallelConfig):
+    return P(par.batch_axes)
+
+
+# ---------------------------------------------------------------------------
+# loss assembly
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(model_cfg: ModelConfig, head_cfg: HeadConfig,
+                 par: ParallelConfig, mesh, *, global_tokens: int,
+                 use_knn: bool = False, m_local: int = 0):
+    sharder = make_sharder(mesh, par)
+    # vocab may be sharded over one axis ("model") or several (the paper's
+    # 1-D layout: every chip an fc shard — rule override vocab=data,model)
+    vocab_ax = par.mesh_axis_for("vocab") or par.model_axis
+    vax = vocab_ax if isinstance(vocab_ax, tuple) else (vocab_ax,)
+    maxis = vocab_ax if isinstance(vocab_ax, tuple) else vocab_ax
+    baxes = tuple(a for a in par.batch_axes if a not in vax)
+    cosine = 16.0 if (use_knn or model_cfg.family in ("cnn", "feats")) else 0.0
+    n_valid = (effective_vocab(model_cfg)
+               if model_cfg.real_vocab_size else 0)
+
+    param_sharder = make_layer_param_sharder(model_cfg, par, mesh)
+
+    def loss_fn(params, inputs, graph=None):
+        h, aux, _ = lm.backbone(params, model_cfg, inputs, sharder=sharder,
+                                remat=par.remat, param_sharder=param_sharder)
+        d = h.shape[-1]
+        f = h.reshape(-1, d)
+        labels = inputs["labels"].reshape(-1)
+        f = sharder(f, ("batch", "embed"))
+        w = lm.head_weight(params, model_cfg)
+        if use_knn:
+            offsets, neighbors, ranks = graph
+            body = functools.partial(
+                knn_softmax_local, model_axis=maxis, batch_axes=baxes,
+                global_batch=global_tokens, m_local=m_local,
+                k_cap=head_cfg.knn_k, cosine_scale=16.0, n_valid=n_valid)
+            fn = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(P(baxes or None, None), P(baxes or None),
+                          P(maxis, None), P(maxis, None), P(maxis, None),
+                          P(maxis, None)),
+                out_specs=(P(), dict(KNN_METRICS)), check_vma=False)
+            loss, metrics = fn(f, labels, w, offsets, neighbors, ranks)
+        else:
+            body = functools.partial(
+                full_softmax_local, model_axis=maxis, batch_axes=baxes,
+                global_batch=global_tokens, cosine_scale=cosine,
+                n_valid=n_valid)
+            fn = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(P(baxes or None, None), P(baxes or None),
+                          P(maxis, None)),
+                out_specs=(P(), dict(FULL_METRICS)), check_vma=False)
+            loss, metrics = fn(f, labels, w)
+        return loss + aux, metrics
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def auto_micro_batches(model_cfg: ModelConfig, par: ParallelConfig,
+                       shape: InputShape, *, target_tokens_per_dev: int = 8192
+                       ) -> int:
+    """Micro-batch count for the paper's §3.3.1 pipeline: bound per-device
+    per-microbatch tokens to ~target (remat working set and per-µbatch
+    feature all-gather size scale with it). Must divide the per-data-shard
+    batch; powers of two only."""
+    sizes = _mesh_sizes(par)
+    shards = 1
+    for a in par.batch_axes:
+        shards *= sizes.get(a, 1)
+    per_shard_b = max(1, shape.global_batch // shards)
+    seq = 1 if model_cfg.family == "cnn" else shape.seq_len
+    per_dev_tokens = per_shard_b * seq
+    n = 1
+    while (n < per_shard_b and per_dev_tokens // n > target_tokens_per_dev
+           and per_shard_b % (n * 2) == 0):
+        n *= 2
+    return n
+
+
+def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
+                    par: ParallelConfig, train_cfg: TrainConfig, mesh,
+                    shape: InputShape, *, use_knn: bool = False,
+                    n_micro: Optional[int] = None):
+    from repro.core.pipeline import microbatched_value_and_grad
+
+    if n_micro is None:
+        n_micro = (train_cfg.micro_batch
+                   or auto_micro_batches(model_cfg, par, shape))
+    tokens = shape.global_batch * (1 if model_cfg.family == "cnn"
+                                   else shape.seq_len)
+    m_local = 0
+    if use_knn:
+        vocab_ax = par.mesh_axis_for("vocab") or par.model_axis
+        vax = vocab_ax if isinstance(vocab_ax, tuple) else (vocab_ax,)
+        n_model = 1
+        for a in vax:
+            n_model *= mesh.shape[a]
+        v_loc = model_cfg.vocab_size // n_model
+        m_local = max(8, int(v_loc * head_cfg.active_frac))
+    loss_fn = make_loss_fn(model_cfg, head_cfg, par, mesh,
+                           global_tokens=tokens // n_micro, use_knn=use_knn,
+                           m_local=m_local)
+    opt = make_optimizer(train_cfg)
+
+    if use_knn:
+        def train_step(params, opt_state, inputs, graph, lr):
+            (loss, metrics), grads = microbatched_value_and_grad(
+                lambda p, x: loss_fn(p, x, graph), params, inputs, n_micro)
+            updates, opt_state = opt.update(grads, opt_state, params, lr)
+            params = apply_updates(params, updates)
+            return params, opt_state, loss, metrics
+    else:
+        def train_step(params, opt_state, inputs, lr):
+            (loss, metrics), grads = microbatched_value_and_grad(
+                loss_fn, params, inputs, n_micro)
+            updates, opt_state = opt.update(grads, opt_state, params, lr)
+            params = apply_updates(params, updates)
+            return params, opt_state, loss, metrics
+
+    return train_step
+
+
+def make_prefill_step(model_cfg: ModelConfig, par: ParallelConfig, mesh,
+                      shape: InputShape):
+    """Prefill: full forward + caches + last-position greedy token."""
+    sharder = make_sharder(mesh, par)
+    maxis = par.model_axis
+
+    param_sharder = make_layer_param_sharder(model_cfg, par, mesh)
+
+    def prefill_step(params, inputs):
+        window = lm.decode_window(model_cfg, shape.seq_len)
+        h, _, caches = lm.backbone(params, model_cfg, inputs, sharder=sharder,
+                                   remat=par.remat, want_cache=True,
+                                   cache_window=window,
+                                   param_sharder=param_sharder)
+        f = h[:, -1, :]
+        w = lm.head_weight(params, model_cfg)
+        n_valid = (effective_vocab(model_cfg)
+                   if model_cfg.real_vocab_size else 0)
+        bax = fit_spec(P(par.batch_axes), (shape.global_batch,), par)[0]
+        fn = jax.shard_map(
+            functools.partial(serve_logits_local, model_axis=maxis,
+                              n_valid=n_valid),
+            mesh=mesh,
+            in_specs=(P(bax, None), P(maxis, None)),
+            out_specs=(P(bax), P(bax, maxis)),
+            check_vma=False)
+        token, _ = fn(f, w)
+        return token, caches
+
+    return prefill_step
+
+
+def make_serve_step(model_cfg: ModelConfig, par: ParallelConfig, mesh,
+                    shape: InputShape):
+    """One decode token through the cache + sharded-vocab greedy sample."""
+    maxis = par.model_axis
+    window = lm.decode_window(model_cfg, shape.seq_len)
+
+    param_sharder = make_layer_param_sharder(model_cfg, par, mesh)
+
+    def serve_step(params, caches, slots, token):
+        h, caches, slots = lm.decode(params, model_cfg, {"token": token},
+                                     caches, slots, window=window,
+                                     param_sharder=param_sharder)
+        f = h[:, 0, :]
+        w = lm.head_weight(params, model_cfg)
+        n_valid = (effective_vocab(model_cfg)
+                   if model_cfg.real_vocab_size else 0)
+        bax = fit_spec(P(par.batch_axes), (shape.global_batch,), par)[0]
+        fn = jax.shard_map(
+            functools.partial(serve_logits_local, model_axis=maxis,
+                              n_valid=n_valid),
+            mesh=mesh,
+            in_specs=(P(bax, None), P(maxis, None)),
+            out_specs=(P(bax), P(bax, maxis)),
+            check_vma=False)
+        next_token, _ = fn(f, w)
+        return next_token[:, None], caches, slots
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding trees for the dry-run
+# ---------------------------------------------------------------------------
+
+
+def cache_pspecs(model_cfg: ModelConfig, par: ParallelConfig, shape: InputShape):
+    ax = lm.cache_logical_axes(model_cfg)
+    caches, slots, _ = lm.decode_state_specs(model_cfg, shape)
+
+    def one(t, leaf):
+        return fit_spec(pspec_of(t, par), leaf.shape, par)
+
+    cache_specs = jax.tree.map(one, ax, caches,
+                               is_leaf=lambda t: isinstance(t, tuple))
+    slot_specs = jax.tree.map(lambda _: P(), slots)
+    return cache_specs, slot_specs
+
+
+def input_pspecs(model_cfg: ModelConfig, shape: InputShape,
+                 par: ParallelConfig):
+    specs = lm.input_specs(model_cfg, shape)
+    return jax.tree.map(
+        lambda s: fit_spec(batch_pspec(par), s.shape, par), specs)

@@ -1,0 +1,106 @@
+"""FCCS-driven training loop for the paper system (hybrid trainer).
+
+Orchestrates: warm-up LR, continuous batch growth via gradient accumulation
+(quantized to powers of two so at most log2(64) step variants compile), KNN
+graph rebuilds (training "suspended", as the paper does at epoch boundaries),
+periodic checkpoints and eval.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+
+from repro import checkpoint as ckpt_lib
+from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
+from repro.core import fccs
+from repro.train import hybrid
+
+
+def _pow2_quantize(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+@dataclass
+class PaperTrainer:
+    model_cfg: ModelConfig
+    head_cfg: HeadConfig
+    train_cfg: TrainConfig
+    mesh: object
+    data_fn: Callable[[int, int], dict]     # (step, global_batch) -> inputs
+    hw_batch: int                           # per-update device-limited batch
+    use_knn: bool = False
+    lr_fn: Optional[Callable[[int], float]] = None  # default: FCCS policy
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    log_every: int = 10
+    seed: int = 0
+    history: list = field(default_factory=list)
+
+    def __post_init__(self):
+        n_dev = self.mesh.shape[hybrid.AXIS]
+        self.n_dev = n_dev
+        self.state = hybrid.init_state(
+            jax.random.PRNGKey(self.seed), self.model_cfg, self.head_cfg,
+            self.train_cfg, n_dev)
+        self._steps = {}
+        self.graph = hybrid.dummy_graph(n_dev)
+        if self.use_knn:
+            self.rebuild_graph()
+        self.eval_step = hybrid.make_eval_step(self.model_cfg, self.mesh,
+                                               self.state)
+
+    def _get_step(self, n_micro: int):
+        if n_micro not in self._steps:
+            self._steps[n_micro] = hybrid.make_train_step(
+                self.model_cfg, self.head_cfg, self.train_cfg, self.mesh,
+                n_micro=n_micro, use_knn=self.use_knn,
+                state_template=self.state)
+        return self._steps[n_micro]
+
+    def rebuild_graph(self):
+        """Paper §3.2.2: suspend training, rebuild the exact graph on the
+        training devices, resume."""
+        t0 = time.perf_counter()
+        self.graph = hybrid.rebuild_graph(
+            self.mesh, self.state.w_head, k=self.head_cfg.knn_k,
+            kprime=self.head_cfg.knn_kprime)
+        return time.perf_counter() - t0
+
+    def run(self, total_steps: int, *, use_fccs_batch: bool = True):
+        fcfg = self.train_cfg.fccs
+        with jax.set_mesh(self.mesh):
+            for t in range(total_steps):
+                lr = (self.lr_fn(t) if self.lr_fn is not None
+                      else fccs.learning_rate(t, fcfg))
+                n = (_pow2_quantize(fccs.accum_steps(t, fcfg, self.hw_batch))
+                     if use_fccs_batch else 1)
+                inputs = self.data_fn(t, self.hw_batch * n)
+                step = self._get_step(n)
+                self.state, loss, metrics = step(self.state, inputs,
+                                                 self.graph, lr)
+                if (self.use_knn and self.head_cfg.rebuild_every
+                        and (t + 1) % self.head_cfg.rebuild_every == 0):
+                    self.rebuild_graph()
+                if self.ckpt_dir and self.ckpt_every and \
+                        (t + 1) % self.ckpt_every == 0:
+                    ckpt_lib.save(self.ckpt_dir,
+                                  {"fe": self.state.fe_params,
+                                   "w": self.state.w_head}, step=t + 1)
+                row = {"step": t, "lr": lr, "batch": self.hw_batch * n,
+                       "loss": float(loss),
+                       "acc": float(metrics["accuracy"])}
+                self.history.append(row)
+                if self.log_every and t % self.log_every == 0:
+                    print(f"[train] step={t} lr={lr:.4f} B={row['batch']} "
+                          f"loss={row['loss']:.4f} acc={row['acc']:.3f}")
+        return self.history
+
+    def evaluate(self, eval_inputs) -> float:
+        with jax.set_mesh(self.mesh):
+            return float(self.eval_step(self.state, eval_inputs))

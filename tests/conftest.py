@@ -1,0 +1,39 @@
+# 8 fake host devices for the distributed (shard_map / GSPMD) tests.
+# NOTE: deliberately NOT 512 — only launch/dryrun.py uses the production
+# device count, per the dry-run spec. Must run before jax initializes.
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs.base import get_model_config  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    """1-D ring mesh — the paper's hybrid-parallel layout."""
+    from repro.train import hybrid
+    return hybrid.make_hybrid_mesh(8)
+
+
+@pytest.fixture(scope="session")
+def mesh2x4():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(2, 4)
+
+
+@pytest.fixture(scope="session")
+def par2x4():
+    from repro.launch.mesh import make_host_parallel_config
+    return make_host_parallel_config(2, 4)
+
+
+def reduced_cfg(arch: str):
+    """Reduced smoke config in fp32 (CPU numerics)."""
+    return dataclasses.replace(get_model_config(arch, reduced=True),
+                               dtype="float32")

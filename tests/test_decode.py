@@ -1,0 +1,92 @@
+"""Prefill -> decode continuation must equal the full forward pass, for
+every architecture family (KV rotating buffers, SSM state carry, whisper
+cross-attention caches)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, InputShape
+from repro.models import decoder as dec_lib
+from repro.models import encdec as encdec_lib
+from repro.models import lm
+from tests.conftest import reduced_cfg
+
+S = 17  # deliberately not a multiple of chunk/window sizes
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_continuation_matches_full_forward(arch):
+    cfg = reduced_cfg(arch)
+    params = lm.init_model(jax.random.PRNGKey(1), cfg)
+    inputs = lm.input_example(cfg, InputShape("t", S, 2, "train"),
+                              jax.random.PRNGKey(1))
+    h_full, _, _ = lm.backbone(params, cfg, inputs)
+    window = lm.decode_window(cfg, S)
+    pre = dict(inputs)
+    pre["tokens"] = inputs["tokens"][:, :S - 1]
+    pre.pop("labels", None)
+    _, _, caches = lm.backbone(params, cfg, pre, want_cache=True,
+                               cache_window=window)
+    if cfg.family == "encdec":
+        enc_out = encdec_lib.encode(params["encdec"], cfg,
+                                    inputs["frames"].astype(jnp.float32))
+        ck, cv = encdec_lib.build_cross_cache(params["encdec"], cfg, enc_out)
+        pad = window - caches["k"].shape[2]
+        padw = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        caches = {"k": jnp.pad(caches["k"], padw),
+                  "v": jnp.pad(caches["v"], padw),
+                  "cross_k": ck, "cross_v": cv}
+    slots = dec_lib.init_cache_slots(cfg, window,
+                                     prefill_positions=jnp.arange(S - 1))
+    h_dec, _, _ = lm.decode(params, cfg,
+                            {"token": inputs["tokens"][:, S - 1:S]},
+                            caches, slots, window=window)
+    err = float(jnp.max(jnp.abs(h_dec[:, 0] - h_full[:, -1])))
+    assert err < 5e-4, f"{arch}: {err}"
+
+
+@pytest.mark.parametrize("arch", ["smollm_135m", "mamba2_370m", "hymba_1_5b"])
+def test_multi_step_decode_matches_forward(arch):
+    """Decode 5 tokens sequentially == teacher forcing."""
+    cfg = reduced_cfg(arch)
+    params = lm.init_model(jax.random.PRNGKey(2), cfg)
+    inputs = lm.input_example(cfg, InputShape("t", S, 2, "train"),
+                              jax.random.PRNGKey(2))
+    h_full, _, _ = lm.backbone(params, cfg, inputs)
+    window = lm.decode_window(cfg, S)
+    n_pre = S - 5
+    _, _, caches = lm.backbone(params, cfg,
+                               {"tokens": inputs["tokens"][:, :n_pre]},
+                               want_cache=True, cache_window=window)
+    slots = dec_lib.init_cache_slots(cfg, window,
+                                     prefill_positions=jnp.arange(n_pre))
+    for i in range(5):
+        tok = inputs["tokens"][:, n_pre + i:n_pre + i + 1]
+        h_dec, caches, slots = lm.decode(params, cfg, {"token": tok}, caches,
+                                         slots, window=window)
+        err = float(jnp.max(jnp.abs(h_dec[:, 0] - h_full[:, n_pre + i])))
+        assert err < 5e-4, f"{arch} step {i}: {err}"
+
+
+def test_sliding_window_decode_bounded_cache():
+    """With a sliding window, the rotating cache gives the same result as an
+    unwindowed run restricted to the window."""
+    cfg = dataclasses.replace(reduced_cfg("smollm_135m"), sliding_window=8)
+    params = lm.init_model(jax.random.PRNGKey(3), cfg)
+    inputs = lm.input_example(cfg, InputShape("t", S, 2, "train"),
+                              jax.random.PRNGKey(3))
+    h_full, _, _ = lm.backbone(params, cfg, inputs)  # windowed full fwd
+    window = lm.decode_window(cfg, S)
+    assert window == 8
+    _, _, caches = lm.backbone(params, cfg,
+                               {"tokens": inputs["tokens"][:, :S - 1]},
+                               want_cache=True, cache_window=window)
+    slots = dec_lib.init_cache_slots(cfg, window,
+                                     prefill_positions=jnp.arange(S - 1))
+    h_dec, _, _ = lm.decode(params, cfg,
+                            {"token": inputs["tokens"][:, S - 1:S]},
+                            caches, slots, window=window)
+    err = float(jnp.max(jnp.abs(h_dec[:, 0] - h_full[:, -1])))
+    assert err < 5e-4, err

@@ -1,0 +1,55 @@
+"""Pallas flash-attention kernel vs jnp oracle (shape/flag sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+
+def _oracle(q, k, v, causal, window):
+    bh, s, dh = q.shape
+    t = k.shape[1]
+    sc = jnp.einsum("bsd,btd->bst", q, k) / (dh ** 0.5)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    valid = jnp.ones((s, t), bool)
+    if causal:
+        valid &= kp <= qp
+    if window:
+        valid &= kp > qp - window
+    sc = jnp.where(valid[None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    p = jnp.where(jnp.any(valid, -1)[None, :, None], p, 0.0)
+    return jnp.einsum("bst,btd->bsd", p, v)
+
+
+@pytest.mark.parametrize("bh,s,t,dh,causal,window,bq,bkv", [
+    (4, 256, 256, 64, True, 0, 128, 128),
+    (2, 200, 300, 32, False, 0, 64, 128),   # ragged + padding
+    (3, 256, 256, 64, True, 100, 64, 64),   # sliding window
+    (1, 512, 512, 128, True, 0, 128, 256),
+])
+def test_flash_matches_oracle(bh, s, t, dh, causal, window, bq, bkv):
+    key = jax.random.PRNGKey(bh * s + t)
+    q = jax.random.normal(key, (bh, s, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (bh, t, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, t, dh))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_kv=bkv)
+    ref = _oracle(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (2, 128, 64)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 128, 64)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 128, 64)).astype(dtype)
+    out = flash_attention(q, k, v, block_q=64, block_kv=64)
+    ref = _oracle(q.astype(jnp.float32), k.astype(jnp.float32),
+                  v.astype(jnp.float32), True, 0)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=3e-2 if dtype == jnp.bfloat16 else 2e-5)

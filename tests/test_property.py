@@ -1,0 +1,192 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import FCCSConfig, ParallelConfig
+from repro.core import fccs
+from repro.core import knn_softmax as ks
+from repro.core import sparsify as sp
+from repro.kernels import ops
+from repro.models.layers import multihead_attention
+from repro.models.ssm import ssd_chunked
+from repro.train.gspmd import fit_spec
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# divide-and-conquer top-k is exact for any (n, k, chunk)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(10, 5000), k=st.integers(1, 64),
+       chunk=st.sampled_from([64, 256, 1024]), seed=st.integers(0, 2**16))
+def test_topk_dc_always_exact(n, k, chunk, seed):
+    k = min(k, n)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    v1, _ = ops.topk_dc(x, k, chunk=chunk)
+    v2, _ = jax.lax.top_k(x, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+
+
+# ---------------------------------------------------------------------------
+# DGC conservation: sent + residual == velocity, always
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(8, 2000), sparsity=st.floats(0.5, 0.999),
+       seed=st.integers(0, 2**16))
+def test_dgc_conservation(n, sparsity, seed):
+    from repro.configs.base import DGCConfig
+    g = {"p": jax.random.normal(jax.random.PRNGKey(seed), (n,))}
+    cfg = DGCConfig(enabled=True, sparsity=sparsity, momentum=0.7, chunk=64)
+    st_ = sp.init_dgc_state(g)
+    out, st2, _ = sp.dgc_exchange(g, st_, cfg)
+    err = float(jnp.max(jnp.abs(out["p"] + st2.v["p"] - g["p"])))
+    assert err < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Algorithm-1 selection: no duplicate active ids; self always selected
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(n_loc=st.integers(8, 64), b=st.integers(1, 16), k=st.integers(2, 8),
+       seed=st.integers(0, 2**16))
+def test_select_active_invariants(n_loc, b, k, seed):
+    key = jax.random.PRNGKey(seed)
+    # synthetic "self-first" graph on one shard covering all n_loc classes
+    nbrs = jax.random.randint(key, (n_loc, k), 0, n_loc)
+    nbrs = nbrs.at[:, 0].set(jnp.arange(n_loc))  # self first
+    offsets = jnp.arange(n_loc + 1, dtype=jnp.int32) * k
+    neighbors = nbrs.reshape(-1).astype(jnp.int32)
+    y = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, n_loc)
+    m_local = max(b, n_loc // 2)
+    ids, valid = ks.select_active(y, offsets, neighbors, v_start=0,
+                                  v_loc=n_loc, m_local=m_local, k_cap=k,
+                                  pad_random=False)
+    sel = np.asarray(ids)[np.asarray(valid)]
+    assert len(set(sel.tolist())) == len(sel), "duplicate active ids"
+    assert set(np.asarray(y).tolist()) <= set(sel.tolist()), "label missing"
+
+
+# ---------------------------------------------------------------------------
+# fit_spec: respects divisibility and never reuses a mesh axis
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       seed=st.integers(0, 100))
+def test_fit_spec_invariants(dims, seed):
+    par = ParallelConfig(mesh_shape=(2, 4), axis_names=("data", "model"))
+    rng = np.random.default_rng(seed)
+    options = [None, "data", "model", ("data", "model")]
+    entries = [options[rng.integers(0, len(options))] for _ in dims]
+    spec = fit_spec(P(*entries), tuple(dims), par)
+    sizes = {"data": 2, "model": 4}
+    used = []
+    for d, e in zip(dims, tuple(spec)):
+        names = (e,) if isinstance(e, str) else (e or ())
+        n = 1
+        for a in names:
+            assert a not in used, "axis reused"
+            used.append(a)
+            n *= sizes[a]
+        assert d % n == 0, "non-divisible sharding survived"
+
+
+# ---------------------------------------------------------------------------
+# FCCS: batch size monotone and bounded on any valid config
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(b0=st.integers(1, 512), mult=st.integers(2, 64),
+       t_ini=st.integers(1, 50), dur=st.integers(2, 200))
+def test_fccs_monotone_bounded(b0, mult, t_ini, dur):
+    cfg = FCCSConfig(b0=b0, b_min=b0, b_max=b0 * mult, t_ini=t_ini,
+                     t_final=t_ini + dur)
+    prev = 0
+    for t in range(0, t_ini + dur + 10, max(1, dur // 13)):
+        b = fccs.batch_size(t, cfg)
+        assert b0 <= b <= b0 * mult
+        assert b >= prev
+        prev = b
+
+
+# ---------------------------------------------------------------------------
+# flash attention == direct attention (any shape), incl. window
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([512, 1024, 2048]), hq=st.sampled_from([2, 4]),
+       g=st.sampled_from([1, 2]), window=st.sampled_from([None, 64, 300]),
+       seed=st.integers(0, 2**16))
+def test_flash_equals_direct(s, hq, g, window, seed):
+    key = jax.random.PRNGKey(seed)
+    hk = hq // g if hq % g == 0 else hq
+    dh, b = 16, 1
+    q = jax.random.normal(key, (b, s, hq, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hk, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hk, dh))
+    pos = jnp.arange(s)
+    flash = multihead_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                causal=True, window=window,
+                                q_block=128, kv_block=128)
+    direct = multihead_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                 causal=True, window=window,
+                                 q_block=1 << 20, kv_block=1 << 20)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(direct),
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan == naive recurrence
+# ---------------------------------------------------------------------------
+
+
+def _ssd_naive(x, dt, A, B, C):
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    state = jnp.zeros((b, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t] * A)                       # [b,h]
+        state = decay[:, :, None, None] * state + jnp.einsum(
+            "bhn,bh,bhp->bhnp", Bh[:, t], dt[:, t],
+            x[:, t].astype(jnp.float32))
+        ys.append(jnp.einsum("bhn,bhnp->bhp", Ch[:, t], state))
+    return jnp.stack(ys, axis=1), state
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([16, 33, 64]), chunk=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**16))
+def test_ssd_chunked_equals_naive(s, chunk, seed):
+    key = jax.random.PRNGKey(seed)
+    b, h, p, g, n = 2, 4, 8, 1, 8
+    if s % chunk:
+        s = (s // chunk + 1) * chunk  # ssd_chunked requires multiple
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, s, g, n))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, s, g, n))
+    y1, st1 = ssd_chunked(x, dt, A, B, C, chunk)
+    y2, st2 = _ssd_naive(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), atol=2e-4)

@@ -1,0 +1,127 @@
+"""DGC sparsification (paper §3.3.2) + FCCS (paper §3.4) semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DGCConfig, FCCSConfig
+from repro.core import fccs
+from repro.core import sparsify as sp
+
+
+def _grads(key, shapes=((64, 32), (128,), (16, 16, 4))):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def test_first_step_conservation():
+    """Step 1: communicated + residual == gradient exactly (error feedback
+    loses nothing)."""
+    g = _grads(jax.random.PRNGKey(0))
+    cfg = DGCConfig(enabled=True, sparsity=0.9, momentum=0.9, chunk=64)
+    st = sp.init_dgc_state(g)
+    out, st2, info = sp.dgc_exchange(g, st, cfg)
+    err = jax.tree.map(lambda o, r, orig: float(jnp.max(jnp.abs(o + r - orig))),
+                       out, st2.v, g)
+    assert max(jax.tree.leaves(err)) < 1e-6
+
+
+def test_sparsity_level():
+    g = _grads(jax.random.PRNGKey(1))
+    n_total = sum(x.size for x in jax.tree.leaves(g))
+    cfg = DGCConfig(enabled=True, sparsity=0.95, chunk=64,
+                    group_bytes=1 << 30)
+    st = sp.init_dgc_state(g)
+    out, _, info = sp.dgc_exchange(g, st, cfg)
+    kept = sum(int((jnp.abs(x) > 0).sum()) for x in jax.tree.leaves(out))
+    assert kept <= int(n_total * 0.05) + len(jax.tree.leaves(g)) * 2
+    assert float(info["compression"]) > 5.0
+
+
+def test_momentum_factor_masking():
+    """Selected coordinates must have their momentum buffer zeroed."""
+    g = _grads(jax.random.PRNGKey(2))
+    cfg = DGCConfig(enabled=True, sparsity=0.8, momentum=0.9, chunk=64,
+                    factor_masking=True)
+    st = sp.init_dgc_state(g)
+    out, st2, _ = sp.dgc_exchange(g, st, cfg)
+    for o, u in zip(jax.tree.leaves(out), jax.tree.leaves(st2.u)):
+        sel = jnp.abs(o) > 0
+        assert float(jnp.max(jnp.abs(jnp.where(sel, u, 0.0)))) == 0.0
+
+
+def test_error_feedback_accumulates():
+    """A coordinate below threshold eventually gets sent once its residual
+    accumulates (momentum correction)."""
+    cfg = DGCConfig(enabled=True, sparsity=0.75, momentum=0.0, chunk=8,
+                    factor_masking=False)
+    g = {"p": jnp.array([1.0, 0.4, 0.3, 0.2])}  # keep-1-of-4 -> only 1.0 sent
+    st = sp.init_dgc_state(g)
+    sent_history = []
+    for _ in range(4):
+        out, st, _ = sp.dgc_exchange(g, st, cfg)
+        sent_history.append(np.asarray(out["p"]))
+    total_sent = np.sum(sent_history, axis=0)
+    total_grad = 4 * np.asarray(g["p"])
+    resid = np.asarray(st.v["p"])
+    np.testing.assert_allclose(total_sent + resid, total_grad, atol=1e-6)
+    assert (np.abs(np.sum(sent_history, axis=0))[1:] > 0).any()
+
+
+def test_dc_threshold_exact_vs_ref():
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (5000,)))
+    for k in (1, 7, 100, 4999):
+        assert float(sp.topk_threshold_dc(x, k, chunk=128)) == \
+            float(sp.topk_threshold_ref(x, k))
+
+
+def test_group_leaves_packing():
+    leaves = [jnp.zeros((n,)) for n in (100, 200, 5000, 50, 50)]
+    groups = sp.group_leaves(leaves, group_bytes=2048)
+    flat = [i for g in groups for i in g]
+    assert sorted(flat) == list(range(5))
+    for g in groups[1:]:
+        assert g  # non-empty
+
+
+# ---------------------------------------------------------------------------
+# FCCS
+# ---------------------------------------------------------------------------
+
+CFG = FCCSConfig(eta0=0.4, t_warm=10, b0=64, b_min=64, b_max=4096,
+                 t_ini=20, t_final=120)
+
+
+def test_warmup_then_constant():
+    lrs = [fccs.learning_rate(t, CFG) for t in range(30)]
+    assert lrs[0] < lrs[5] < lrs[9]
+    assert all(abs(lr - 0.4) < 1e-9 for lr in lrs[10:])
+
+
+def test_batch_monotone_increasing():
+    bs = [fccs.batch_size(t, CFG) for t in range(0, 200, 5)]
+    assert all(b2 >= b1 for b1, b2 in zip(bs, bs[1:]))
+    assert bs[0] == 64 and bs[-1] == 4096
+
+
+def test_paper_printed_formula_decreases():
+    """The paper's printed f(t) is the decreasing branch (DESIGN.md notes the
+    sign discrepancy with its own Fig. 7)."""
+    b_start = fccs.batch_size(20, CFG, decreasing=True)
+    b_end = fccs.batch_size(119, CFG, decreasing=True)
+    assert b_start > b_end
+
+
+def test_accum_steps_realize_batch():
+    for t in (0, 50, 119, 150):
+        n = fccs.accum_steps(t, CFG, hw_batch=64)
+        assert n * 64 >= fccs.batch_size(t, CFG)
+        assert (n - 1) * 64 < fccs.batch_size(t, CFG)
+
+
+def test_piecewise_decay():
+    lr = [fccs.piecewise_decay_lr(t, eta0=1.0, steps_per_epoch=10)
+          for t in (0, 49, 50, 100)]
+    assert lr[0] == 1.0 and lr[1] == 1.0
+    assert lr[2] == pytest.approx(0.1) and lr[3] == pytest.approx(0.01)
