@@ -1,29 +1,24 @@
 """Paper Table 2: classification accuracy of softmax variants.
 
-Trains the same extreme-classification head under identical conditions with
-four methods — Full softmax, KNN softmax, Selective softmax (LSH), MACH —
-on the synthetic SKU stream. The paper's claims to validate:
+Trains the same extreme-classification head under IDENTICAL conditions with
+all four registered head strategies — Full softmax, KNN softmax, Selective
+softmax (LSH), MACH — through the one head-agnostic hybrid-parallel trainer
+(this is the comparison the paper actually ran). The claims to validate:
   KNN == Full  >  Selective  >  MACH.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import row
+from repro.api.heads import make_head
 from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
-from repro.core import baselines as bl
-from repro.core.sharded_softmax import ce_ref
 from repro.data.synthetic import ClassificationStream, sku_feature_batch
 from repro.train import hybrid
 
-
-def _eval_nearest(w, stream, n=2048):
-    f, y = stream.eval_batch(0, n)
-    fn = f / jnp.linalg.norm(f, axis=-1, keepdims=True)
-    wn = w / (jnp.linalg.norm(w, axis=-1, keepdims=True) + 1e-12)
-    pred = jnp.argmax(fn @ wn.T, axis=-1)
-    return float(jnp.mean((pred == y).astype(jnp.float32)))
+LR = {"full": 5.0, "knn": 5.0, "selective": 5.0, "mach": 0.5}
+NAMES = {"full": "full_softmax", "knn": "knn_softmax",
+         "selective": "selective_softmax", "mach": "mach"}
 
 
 def run(quick: bool = False):
@@ -34,7 +29,6 @@ def run(quick: bool = False):
     N, D, B = (1024, 64, 64) if quick else (8192, 64, 128)
     frac = 0.5 if quick else 0.2
     steps = 500 if quick else 800
-    lr = 5.0
     stream = ClassificationStream(N, D, seed=0)
     mesh = hybrid.make_hybrid_mesh(8)
     mcfg = ModelConfig(name="t2", family="feats", n_layers=0, d_model=D,
@@ -43,64 +37,26 @@ def run(quick: bool = False):
     tcfg = TrainConfig(optimizer="sgd", momentum=0.0)
 
     results = {}
-    # ---- full & knn via the hybrid-parallel trainer ----------------------
-    for name, use_knn in (("full_softmax", False), ("knn_softmax", True)):
-        hcfg = HeadConfig(knn_k=16, knn_kprime=32, active_frac=frac,
-                          rebuild_every=max(10, steps // 10))
-        state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg, tcfg, 8)
-        step = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh, use_knn=use_knn,
+    for impl in ("full", "knn", "selective", "mach"):
+        hcfg = HeadConfig(softmax_impl=impl, knn_k=16, knn_kprime=32,
+                          active_frac=frac,
+                          rebuild_every=max(10, steps // 10),
+                          mach_b=max(64, N // 16), mach_r=4)
+        head = make_head(mcfg, hcfg)
+        state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg, tcfg,
+                                  8, head=head)
+        step = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh, head=head,
                                       state_template=state)
-        graph = hybrid.dummy_graph(8)
         with jax.set_mesh(mesh):
-            if use_knn:
-                graph = hybrid.rebuild_graph(mesh, state.w_head, k=16,
-                                             kprime=32)
+            state = hybrid.refresh_head_state(head, mesh, state)
             for t in range(steps):
                 state, loss, m = step(state, sku_feature_batch(t, B, stream),
-                                      graph, lr)
-                if use_knn and (t + 1) % hcfg.rebuild_every == 0:
-                    graph = hybrid.rebuild_graph(mesh, state.w_head, k=16,
-                                                 kprime=32)
-        results[name] = _eval_nearest(state.w_head, stream)
-
-    # ---- selective softmax (LSH) -----------------------------------------
-    key = jax.random.PRNGKey(1)
-    w = jax.random.normal(key, (N, D)) / jnp.sqrt(D)
-    m_act = max(64, N // 10)
-
-    @jax.jit
-    def sel_step(w, t, tabs_planes, tabs_off, tabs_cls):
-        tabs = bl.LSHTables(tabs_planes, tabs_off, tabs_cls)
-        f, y = stream.batch(t, B)
-        loss, g = jax.value_and_grad(
-            lambda w_: bl.selective_softmax_ce(f, y, w_, tabs, m=m_act,
-                                               cap=64))(w)
-        return w - lr * g
-
-    tabs = bl.build_lsh_tables(jax.random.fold_in(key, 1), w, 4, 8)
-    for t in range(steps):
-        w = sel_step(w, t, *tabs)
-        if (t + 1) % (steps // 3) == 0:  # rebuild tables on fresh weights
-            tabs = bl.build_lsh_tables(jax.random.fold_in(key, t), w, 4, 8)
-    results["selective_softmax"] = _eval_nearest(w, stream)
-
-    # ---- MACH -------------------------------------------------------------
-    head = bl.init_mach(jax.random.PRNGKey(2), N, D,
-                        n_buckets=max(64, N // 16), n_rep=4)
-
-    @jax.jit
-    def mach_step(wh, t):
-        f, y = stream.batch(t, B)
-        loss, g = jax.value_and_grad(
-            lambda w_: bl.mach_loss(bl.MACHHead(head.hashes, w_), f, y))(wh)
-        return wh - 0.5 * g
-
-    wh = head.w
-    for t in range(steps):
-        wh = mach_step(wh, t)
-    f, y = stream.eval_batch(0, 512)
-    pred = bl.mach_predict(bl.MACHHead(head.hashes, wh), f)
-    results["mach"] = float(jnp.mean((pred == y).astype(jnp.float32)))
+                                      LR[impl])
+                if head.refresh_every and (t + 1) % head.refresh_every == 0:
+                    state = hybrid.refresh_head_state(head, mesh, state)
+            ev = hybrid.make_eval_step(mcfg, hcfg, mesh, state, head=head)
+            results[NAMES[impl]] = float(
+                ev(state, sku_feature_batch(10**6, 2048, stream)))
 
     for name, acc in results.items():
         row(f"table2/{name}", 0.0, f"accuracy={acc:.4f}")

@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import row, timeit
+from repro.api.heads import make_head
 from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
 from repro.data.synthetic import ClassificationStream, sku_feature_batch
 from repro.train import hybrid
@@ -29,21 +30,20 @@ def run(quick: bool = False):
         mcfg = ModelConfig(name="t3", family="feats", n_layers=0, d_model=D,
                            n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=N,
                            dtype="float32")
-        hcfg = HeadConfig(knn_k=16, knn_kprime=32, active_frac=0.1)
         times = {}
         with jax.set_mesh(mesh):
-            for name, use_knn in (("full", False), ("knn", True)):
+            for name in ("full", "knn"):
+                hcfg = HeadConfig(softmax_impl=name, knn_k=16, knn_kprime=32,
+                                  active_frac=0.1)
+                head = make_head(mcfg, hcfg)
                 state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg,
-                                          tcfg, 8)
+                                          tcfg, 8, head=head)
+                state = hybrid.refresh_head_state(head, mesh, state)
                 step = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh,
-                                              use_knn=use_knn,
+                                              head=head,
                                               state_template=state)
-                graph = hybrid.dummy_graph(8)
-                if use_knn:
-                    graph = hybrid.rebuild_graph(mesh, state.w_head, k=16,
-                                                 kprime=32)
                 inputs = sku_feature_batch(0, B, stream)
-                t = timeit(lambda: step(state, inputs, graph, 1.0),
+                t = timeit(lambda: step(state, inputs, 1.0),
                            n=10 if quick else 20)
                 times[name] = t
                 row(f"table3/N{N}_{name}", t * 1e6,

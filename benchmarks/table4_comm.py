@@ -44,10 +44,9 @@ def run(quick: bool = False):
                                           n_micro=v["n_micro"],
                                           state_template=state)
             inputs = lm_batch(0, B, S, cfg.vocab_size)
-            graph = hybrid.dummy_graph(8)
-            t = timeit(lambda: step(state, inputs, graph, 0.1),
+            t = timeit(lambda: step(state, inputs, 0.1),
                        n=5 if quick else 10)
-            _, _, metrics = step(state, inputs, graph, 0.1)
+            _, _, metrics = step(state, inputs, 0.1)
             wire = float(metrics["comm_wire_bytes"]) or \
                 float(metrics["comm_dense_bytes"])
             out[name] = {"t": t, "wire": wire}

@@ -37,13 +37,11 @@ def run(quick: bool = False):
         state = hybrid.init_state(jax.random.PRNGKey(0), cfg, hcfg, tcfg, 8)
         step = hybrid.make_train_step(cfg, hcfg, tcfg, mesh,
                                       state_template=state)
-        graph = hybrid.dummy_graph(8)
         tail = []
         with jax.set_mesh(mesh):
             for t in range(steps):
                 state, loss, m = step(state, lm_batch(t, B, S,
-                                                      cfg.vocab_size),
-                                      graph, 0.5)
+                                                      cfg.vocab_size), 0.5)
                 if t >= steps - 10:
                     tail.append(float(m["accuracy"]))
         accs[name] = float(np.mean(tail))

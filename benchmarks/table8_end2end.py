@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import row, timeit
+from repro.api.heads import make_head
 from repro.configs.base import (DGCConfig, FCCSConfig, HeadConfig,
                                 ModelConfig, TrainConfig)
 from repro.data.synthetic import ClassificationStream, sku_feature_batch
@@ -34,33 +35,33 @@ def run(quick: bool = False):
     base_t = None
     with jax.set_mesh(mesh):
         for name, s in stages:
-            hcfg = HeadConfig(knn_k=16, knn_kprime=32, active_frac=0.1)
+            hcfg = HeadConfig(softmax_impl="knn" if s["knn"] else "full",
+                              knn_k=16, knn_kprime=32, active_frac=0.1)
             tcfg = TrainConfig(optimizer="sgd", dgc=DGCConfig(
                 enabled=s["dgc"], sparsity=0.99, chunk=2048))
+            head = make_head(mcfg, hcfg)
             state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg,
-                                      tcfg, 8)
+                                      tcfg, 8, head=head)
+            state = hybrid.refresh_head_state(head, mesh, state)
             step = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh,
-                                          n_micro=s["n_micro"],
-                                          use_knn=s["knn"],
+                                          n_micro=s["n_micro"], head=head,
                                           state_template=state)
-            graph = (hybrid.rebuild_graph(mesh, state.w_head, k=16,
-                                          kprime=32)
-                     if s["knn"] else hybrid.dummy_graph(8))
             inputs = sku_feature_batch(0, B, stream)
-            t = timeit(lambda: step(state, inputs, graph, 1.0),
+            t = timeit(lambda: step(state, inputs, 1.0),
                        n=5 if quick else 10)
             base_t = base_t or t
             row(f"table8/{name}", t * 1e6,
                 f"throughput={B / t:.0f}/s speedup={base_t / t:.2f}x")
 
     # FCCS epoch reduction (paper: 20 -> 8 epochs == 2.5x fewer iterations)
-    hcfg = HeadConfig(knn_k=16, knn_kprime=32, active_frac=0.1)
+    hcfg = HeadConfig(softmax_impl="knn", knn_k=16, knn_kprime=32,
+                      active_frac=0.1)
     fcfg = FCCSConfig(eta0=4.0, t_warm=steps // 10, b0=B, b_min=B,
                       b_max=8 * B, t_ini=steps // 4, t_final=steps)
     tcfg = TrainConfig(optimizer="sgd", fccs=fcfg)
     trainer = PaperTrainer(mcfg, hcfg, tcfg, mesh,
                            lambda t, b: sku_feature_batch(t, b, stream),
-                           hw_batch=B, use_knn=True, log_every=0)
+                           hw_batch=B, log_every=0)
     hist = trainer.run(steps, use_fccs_batch=True)
     acc = trainer.evaluate(sku_feature_batch(10**6, 512, stream))
     # steps a constant-batch run would need for the same sample budget

@@ -1,49 +1,44 @@
-"""Quickstart: train a 4096-class extreme classifier with the paper's full
-system — hybrid parallelism, KNN softmax, DGC sparsification, FCCS — on 8
-fake devices, then evaluate with the deploy-style nearest-class lookup.
+"""Quickstart: the whole paper system through the ``Experiment`` API.
+
+Trains a 4096-class extreme classifier with hybrid parallelism, the KNN
+softmax head (periodic exact-graph refresh), and FCCS batch growth on 8
+fake devices, then evaluates AND serves with the deploy-style
+nearest-class-weight lookup (§4.5).
+
+Swap ``softmax_impl`` for "full", "selective" or "mach" to train any other
+registered head strategy under identical conditions — no other change.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import os
+from repro.api import Experiment, ensure_host_devices
+from repro.configs.base import DGCConfig, FCCSConfig, HeadConfig, TrainConfig
 
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=8")
-
-import jax  # noqa: E402
-
-from repro.configs.base import (DGCConfig, FCCSConfig, HeadConfig,  # noqa: E402
-                                ModelConfig, TrainConfig)
-from repro.data.synthetic import (ClassificationStream,  # noqa: E402
-                                  sku_feature_batch)
-from repro.train import hybrid  # noqa: E402
-from repro.train.trainer import PaperTrainer  # noqa: E402
+ensure_host_devices(8)
 
 
 def main():
-    n_classes, d, batch = 4096, 64, 128
-    steps = 150
+    n_classes, batch, steps = 4096, 128, 150
 
-    stream = ClassificationStream(n_classes, d, seed=0)
-    mesh = hybrid.make_hybrid_mesh()
+    exp = Experiment.from_config(
+        system="paper",
+        classes=n_classes,
+        feat_dim=64,
+        batch=batch,
+        head=HeadConfig(softmax_impl="knn", knn_k=16, knn_kprime=32,
+                        active_frac=0.1, rebuild_every=50),
+        train=TrainConfig(
+            optimizer="sgd",
+            fccs=FCCSConfig(eta0=5.0, t_warm=15, b0=batch, b_min=batch,
+                            b_max=8 * batch, t_ini=40, t_final=150),
+            dgc=DGCConfig(enabled=False)),
+        log_every=25)
 
-    model = ModelConfig(name="quickstart", family="feats", n_layers=0,
-                        d_model=d, n_heads=0, n_kv_heads=0, d_ff=0,
-                        vocab_size=n_classes, dtype="float32")
-    head = HeadConfig(softmax_impl="knn", knn_k=16, knn_kprime=32,
-                      active_frac=0.1, rebuild_every=50)
-    fccs = FCCSConfig(eta0=5.0, t_warm=15, b0=batch, b_min=batch,
-                      b_max=8 * batch, t_ini=40, t_final=150)
-    train = TrainConfig(optimizer="sgd", fccs=fccs,
-                        dgc=DGCConfig(enabled=False))
-
-    trainer = PaperTrainer(model, head, train, mesh,
-                           lambda t, b: sku_feature_batch(t, b, stream),
-                           hw_batch=batch, use_knn=True, log_every=25)
-    trainer.run(steps, use_fccs_batch=True)
-    acc = trainer.evaluate(sku_feature_batch(10**6, 1024, stream))
+    exp.fit(steps, use_fccs_batch=True)
+    acc = exp.evaluate(eval_batch=1024)
+    preds = exp.serve(batch=64)
     print(f"\nfinal deploy-style (nearest class weight) accuracy: {acc:.4f}")
-    print(f"graph rebuilds took the place of LR decay; final batch = "
-          f"{trainer.history[-1]['batch']}")
+    print(f"serve() returned {preds.shape[0]} retrieval ids; final batch = "
+          f"{exp.trainer.history[-1]['batch']}")
 
 
 if __name__ == "__main__":

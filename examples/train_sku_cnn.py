@@ -42,7 +42,7 @@ def main():
     trainer = PaperTrainer(
         model, head, train, mesh,
         lambda t, b: sku_image_batch(t, b, args.classes),
-        hw_batch=args.batch, use_knn=True, log_every=20,
+        hw_batch=args.batch, log_every=20,
         lr_fn=lambda t: 0.5 * min(1.0, (t + 1) / 20))
     trainer.run(args.steps, use_fccs_batch=False)
     acc = trainer.evaluate(sku_image_batch(10**6, 256, args.classes))

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Pre-merge smoke gate: `Experiment` end-to-end for every registered softmax
+# head on the paper system, plus the reduced zoo LM (train + serve).
+# Runs in ~2 minutes on the 8-fake-device CPU container.
+#
+#   bash scripts/smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+for head in full knn selective mach; do
+  lr=2.0
+  [ "$head" = mach ] && lr=0.3   # raw-logit bucket CE wants a cooler LR
+  echo "=== paper / $head head ==="
+  python -m repro.launch.train --system paper --devices 8 --head "$head" \
+      --classes 512 --steps 8 --batch 32 --lr "$lr"
+done
+
+echo "=== zoo / smollm_135m (reduced) train ==="
+python -m repro.launch.train --system zoo --devices 8 --arch smollm_135m \
+    --reduced --steps 4 --batch 16 --seq 32 --lr 0.5
+
+echo "=== zoo / smollm_135m (reduced) serve ==="
+python -m repro.launch.serve --devices 8 --arch smollm_135m --reduced \
+    --prompt-len 16 --gen 8 --batch 4
+
+echo "smoke OK"

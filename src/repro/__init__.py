@@ -1,0 +1,1 @@
+from repro import compat  # noqa: F401  (jax forward-compat aliases)

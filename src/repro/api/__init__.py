@@ -1,0 +1,13 @@
+"""Public API: pluggable softmax-head strategies + the single ``Experiment``
+entry point over the paper and zoo systems."""
+from repro.api.bootstrap import ensure_host_devices
+from repro.api.heads import (HEAD_REGISTRY, HeadState, SoftmaxHead,
+                             make_head, register_head)
+from repro.api.experiment import (Experiment, PaperExperiment,
+                                  ZooExperiment, paper_model_config)
+
+__all__ = [
+    "HEAD_REGISTRY", "HeadState", "SoftmaxHead", "make_head",
+    "register_head", "Experiment", "PaperExperiment", "ZooExperiment",
+    "paper_model_config", "ensure_host_devices",
+]

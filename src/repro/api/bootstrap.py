@@ -1,0 +1,37 @@
+"""Process bootstrap shared by every launcher / script.
+
+The CPU container fakes a multi-chip host via an XLA flag that must be set
+BEFORE jax initializes; both launchers used to duplicate this dance. Call
+``ensure_host_devices`` first thing in ``main()`` (before any jax import).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+
+
+def ensure_host_devices(n: int) -> None:
+    """Request ``n`` fake host devices (no-op when n is falsy).
+
+    Appends ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS. Must
+    run before jax first initializes its backends; if jax is already
+    imported AND initialized with a different device count, warns instead
+    of silently doing nothing.
+    """
+    if not n:
+        return
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n}")
+    jax = sys.modules.get("jax")
+    if jax is not None:
+        try:
+            have = len(jax.devices())
+        except Exception:
+            return  # backends not initialized yet: the flag will apply
+        if have != n:
+            warnings.warn(
+                f"jax already initialized with {have} devices; "
+                f"--devices {n} has no effect in this process",
+                RuntimeWarning, stacklevel=2)

@@ -1,0 +1,346 @@
+"""Single ``Experiment`` entry point over the paper and zoo systems.
+
+Collapses the two divergent launch paths into one façade:
+
+  * ``system="paper"`` — the faithful hybrid-parallel trainer (FE data
+    parallel + head model parallel on a 1-D ring) with ANY registered
+    softmax head (full / knn / selective / mach), DGC and FCCS toggles.
+  * ``system="zoo"`` — the GSPMD trainer for any assigned architecture,
+    tensor/expert parallel on a (data, model) mesh, plus the batched
+    greedy-decoding serve path.
+
+Every experiment exposes ``.fit()``, ``.evaluate()``, ``.serve()``; the
+launchers in ``repro.launch`` are thin argparse shims over this class.
+
+  >>> exp = Experiment.from_config(system="paper", classes=4096,
+  ...                              head=HeadConfig(softmax_impl="knn",
+  ...                                              rebuild_every=50))
+  >>> exp.fit(150)
+  >>> exp.evaluate()
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.configs.base import (DGCConfig, FCCSConfig, HeadConfig,
+                                InputShape, ModelConfig, TrainConfig,
+                                get_model_config, pad_vocab)
+
+
+def paper_model_config(trunk: str = "feats", classes: int = 4096,
+                       feat_dim: int = 64) -> ModelConfig:
+    """The paper system's trunk config: raw features or the reduced
+    SKU ResNet."""
+    if trunk == "feats":
+        return ModelConfig(name="paper-feats", family="feats", n_layers=0,
+                           d_model=feat_dim, n_heads=0, n_kv_heads=0,
+                           d_ff=0, vocab_size=classes, dtype="float32")
+    if trunk == "cnn":
+        from repro.configs import sku100m_resnet
+        return dataclasses.replace(sku100m_resnet.reduced(classes),
+                                   dtype="float32")
+    raise ValueError(f"unknown paper trunk {trunk!r}")
+
+
+class Experiment:
+    """Facade over one configured training/serving system."""
+
+    @staticmethod
+    def from_config(*, system: str = "paper", **kw) -> "Experiment":
+        if system == "paper":
+            return PaperExperiment(**kw)
+        if system == "zoo":
+            return ZooExperiment(**kw)
+        raise ValueError(f"unknown system {system!r} (paper | zoo)")
+
+    def fit(self, steps: int, **kw):
+        raise NotImplementedError
+
+    def evaluate(self, inputs=None) -> float:
+        raise NotImplementedError
+
+    def serve(self, *args, **kw):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# paper system
+# ---------------------------------------------------------------------------
+
+
+class PaperExperiment(Experiment):
+    """The paper's end-to-end system with a pluggable softmax head."""
+
+    def __init__(self, *, model: Optional[ModelConfig] = None,
+                 head: Optional[HeadConfig] = None,
+                 train: Optional[TrainConfig] = None,
+                 trunk: str = "feats", classes: int = 4096,
+                 feat_dim: int = 64, batch: int = 64,
+                 data_fn: Optional[Callable[[int, int], dict]] = None,
+                 mesh=None, lr_fn=None, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 50, log_every: int = 10, seed: int = 0):
+        from repro.train import hybrid
+        from repro.train.trainer import PaperTrainer
+
+        self.model_cfg = model or paper_model_config(trunk, classes, feat_dim)
+        self.head_cfg = head or HeadConfig()
+        self.train_cfg = train or TrainConfig(optimizer="sgd")
+        self.mesh = mesh if mesh is not None else hybrid.make_hybrid_mesh()
+        self.batch = batch
+        if data_fn is None:
+            data_fn = self._default_data_fn()
+        self.data_fn = data_fn
+        self.trainer = PaperTrainer(
+            self.model_cfg, self.head_cfg, self.train_cfg, self.mesh,
+            data_fn, hw_batch=batch, lr_fn=lr_fn,
+            ckpt_dir=ckpt_dir or None, ckpt_every=ckpt_every,
+            log_every=log_every, seed=seed)
+        self._serve_step = None
+
+    def _default_data_fn(self):
+        from repro.data.synthetic import (ClassificationStream,
+                                          sku_feature_batch, sku_image_batch)
+        n_classes = self.model_cfg.vocab_size
+        if self.model_cfg.family == "feats":
+            stream = ClassificationStream(n_classes, self.model_cfg.d_model)
+            return lambda t, b: sku_feature_batch(t, b, stream)
+        return lambda t, b: sku_image_batch(t, b, n_classes)
+
+    @property
+    def head(self):
+        return self.trainer.head
+
+    @property
+    def state(self):
+        return self.trainer.state
+
+    def fit(self, steps: int, *, use_fccs_batch: bool = True):
+        return self.trainer.run(steps, use_fccs_batch=use_fccs_batch)
+
+    def evaluate(self, inputs=None, *, eval_batch: Optional[int] = None
+                 ) -> float:
+        if inputs is None:
+            inputs = self.data_fn(10**6, eval_batch or 4 * self.batch)
+        return self.trainer.evaluate(inputs)
+
+    def serve(self, inputs=None, *, batch: Optional[int] = None):
+        """Deploy-style retrieval (§4.5): nearest-class (or hashed-vote)
+        predictions for a batch of inputs. Returns [b] class ids."""
+        import jax
+
+        from repro.train import hybrid
+
+        if inputs is None:
+            inputs = self.data_fn(10**6, batch or self.batch)
+        if self._serve_step is None:
+            self._serve_step = hybrid.make_serve_step(
+                self.model_cfg, self.head_cfg, self.mesh, self.state,
+                head=self.trainer.head)
+        with jax.set_mesh(self.mesh):
+            return jax.device_get(self._serve_step(self.state, inputs))
+
+
+# ---------------------------------------------------------------------------
+# zoo system (GSPMD trainer + decode serving)
+# ---------------------------------------------------------------------------
+
+
+class ZooExperiment(Experiment):
+    """GSPMD training/serving for any assigned architecture."""
+
+    def __init__(self, *, arch: str = "smollm_135m", reduced: bool = False,
+                 head: Optional[HeadConfig] = None,
+                 train: Optional[TrainConfig] = None,
+                 batch: int = 64, seq: int = 64, n_model: Optional[int] = None,
+                 ckpt_dir: Optional[str] = None, log_every: int = 10,
+                 seed: int = 0):
+        import jax
+
+        from repro.launch.mesh import (make_host_mesh,
+                                       make_host_parallel_config)
+        from repro.models import lm
+
+        n_dev = len(jax.devices())
+        n_model = n_model or min(4, n_dev)
+        n_data = max(1, n_dev // n_model)
+        self.mesh = make_host_mesh(n_data, n_model)
+        self.par = make_host_parallel_config(n_data, n_model)
+        cfg = get_model_config(arch, reduced=reduced)
+        if reduced:
+            cfg = dataclasses.replace(cfg, dtype="float32")
+        self.model_cfg = pad_vocab(cfg, n_model)
+        self.head_cfg = head or HeadConfig()
+        if self.head_cfg.softmax_impl not in ("full", "knn"):
+            # the GSPMD trainer threads only the knn graph today; failing
+            # loudly beats silently training full softmax under another name
+            raise ValueError(
+                f"zoo system supports softmax_impl 'full' or 'knn', got "
+                f"{self.head_cfg.softmax_impl!r} (selective/mach run on the "
+                f"paper system; see ROADMAP open items)")
+        self.train_cfg = train or TrainConfig(optimizer="sgd")
+        self.batch, self.seq = batch, seq
+        self.ckpt_dir = ckpt_dir or None
+        self.log_every = log_every
+        self.shape = InputShape("experiment", seq, batch, "train")
+        self.history: list = []
+
+        from repro.train import gspmd
+        self._gspmd = gspmd
+        with jax.set_mesh(self.mesh):
+            params = lm.init_model(jax.random.PRNGKey(seed), self.model_cfg)
+            shards = gspmd.param_shardings(self.model_cfg, self.par,
+                                           self.mesh)
+            self.params = jax.tree.map(jax.device_put, params, shards)
+        # optimizer moments / train step are built lazily on first fit()
+        # so a serve-only Experiment stays at params-only cost
+        self.opt_state = None
+        self._train_step = None
+        self._eval_loss = None
+        self.graph = None        # knn head: sharded CompressedGraph
+        self._uses_knn = self.head_cfg.softmax_impl == "knn"
+
+    @property
+    def _m_local(self) -> int:
+        n_model = self.mesh.shape["model"]
+        v_loc = self.model_cfg.vocab_size // n_model
+        return max(8, int(v_loc * self.head_cfg.active_frac))
+
+    def rebuild_graph(self):
+        """KNN head: ring-build the exact graph of the CURRENT head weights
+        on the training mesh and compress it per vocab shard (the zoo
+        counterpart of the paper trainer's head refresh)."""
+        import jax
+        import numpy as np
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core import knn_graph as kg
+        from repro.models import lm
+
+        n_model = self.mesh.shape["model"]
+        with jax.set_mesh(self.mesh):
+            w = lm.head_weight(self.params, self.model_cfg)
+            graph = kg.build_graph_distributed(
+                self.mesh, w, k=self.head_cfg.knn_k,
+                kprime=self.head_cfg.knn_kprime, model_axis="model")
+            cg = kg.compress_graph(np.asarray(jax.device_get(graph)),
+                                   n_model)
+            sh = NamedSharding(self.mesh, P("model", None))
+            self.graph = tuple(jax.device_put(a, sh)
+                               for a in (cg.offsets, cg.neighbors, cg.ranks))
+        return self.graph
+
+    def _batch(self, t: int):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.data.synthetic import lm_batch
+        cfg = self.model_cfg
+        inputs = lm_batch(t, self.batch, self.seq,
+                          cfg.real_vocab_size or cfg.vocab_size)
+        if cfg.family == "encdec":
+            inputs["frames"] = jax.random.normal(
+                jax.random.PRNGKey(t),
+                (self.batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+        return inputs
+
+    def fit(self, steps: int, *, lr: float = 0.5):
+        import jax
+
+        from repro.optim import make_optimizer
+        if self._uses_knn and self.graph is None:
+            self.rebuild_graph()
+        if self._train_step is None:
+            self.opt_state = make_optimizer(self.train_cfg).init(self.params)
+            self._train_step = jax.jit(self._gspmd.make_train_step(
+                self.model_cfg, self.head_cfg, self.par, self.train_cfg,
+                self.mesh, self.shape))
+        refresh_every = (self.head_cfg.rebuild_every
+                         if self._uses_knn else 0)
+        with jax.set_mesh(self.mesh):
+            for t in range(steps):
+                args = ((self._batch(t), self.graph, lr) if self._uses_knn
+                        else (self._batch(t), lr))
+                self.params, self.opt_state, loss, metrics = \
+                    self._train_step(self.params, self.opt_state, *args)
+                if refresh_every and (t + 1) % refresh_every == 0:
+                    self.rebuild_graph()
+                row = {"step": t, "loss": float(loss),
+                       "acc": float(metrics["accuracy"])}
+                self.history.append(row)
+                if self.log_every and t % self.log_every == 0:
+                    print(f"[zoo] step={t} loss={row['loss']:.4f} "
+                          f"acc={row['acc']:.3f}")
+        if self.ckpt_dir:
+            from repro import checkpoint as ckpt
+            ckpt.save(self.ckpt_dir, self.params, step=len(self.history))
+            print(f"[zoo] checkpoint written to {self.ckpt_dir}")
+        return self.history
+
+    def evaluate(self, inputs=None) -> float:
+        """Next-token accuracy on a held-out (late-stream) batch."""
+        import jax
+        if self._uses_knn and self.graph is None:
+            self.rebuild_graph()
+        if inputs is None:
+            inputs = self._batch(10**6)
+        # the CE normalizer is baked into the loss fn: rebuild per token count
+        tokens = int(jax.numpy.size(inputs["labels"]))
+        if self._eval_loss is None or self._eval_loss[0] != tokens:
+            loss_fn = self._gspmd.make_loss_fn(
+                self.model_cfg, self.head_cfg, self.par, self.mesh,
+                global_tokens=tokens, m_local=self._m_local)
+            self._eval_loss = (tokens, jax.jit(loss_fn))
+        with jax.set_mesh(self.mesh):
+            args = (inputs, self.graph) if self._uses_knn else (inputs,)
+            _, metrics = self._eval_loss[1](self.params, *args)
+            return float(metrics["accuracy"])
+
+    def serve(self, *, prompt_len: int = 32, gen: int = 16,
+              batch: Optional[int] = None):
+        """Batched greedy decoding: prefill once, then single-token decode
+        steps through the KV/SSM cache and the sharded-vocab argmax.
+        Returns generated tokens [batch, gen]."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.data.synthetic import lm_batch
+        from repro.models import decoder as dec_lib
+        from repro.models import lm
+
+        cfg = self.model_cfg
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "serve() supports decoder-only archs; whisper decoding is "
+                "exercised in tests")
+        gspmd = self._gspmd
+        batch = batch or self.batch
+        total = prompt_len + gen
+        dshape = InputShape("serve-decode", total, batch, "decode")
+        with jax.set_mesh(self.mesh):
+            prompts = lm_batch(0, batch, prompt_len,
+                               cfg.real_vocab_size or cfg.vocab_size)
+            window = lm.decode_window(cfg, total)
+            prefill = jax.jit(gspmd.make_prefill_step(cfg, self.par,
+                                                      self.mesh, dshape))
+            serve = jax.jit(gspmd.make_serve_step(cfg, self.par, self.mesh,
+                                                  dshape))
+            tok, caches = prefill(self.params, {"tokens": prompts["tokens"]})
+
+            def grow(c):
+                if c.ndim >= 3 and c.shape[2] == prompt_len:
+                    pad = [(0, 0)] * c.ndim
+                    pad[2] = (0, window - prompt_len)
+                    return jnp.pad(c, pad)
+                return c
+            if cfg.family != "ssm":
+                caches = jax.tree.map(grow, caches)
+            slots = dec_lib.init_cache_slots(
+                cfg, window, prefill_positions=jnp.arange(prompt_len))
+            out = [tok]
+            tok = tok[:, None]
+            for _ in range(gen - 1):
+                tok, caches, slots = serve(self.params, caches, slots, tok)
+                out.append(tok[:, 0])
+            return jax.device_get(jnp.stack(out, axis=1))

@@ -1,0 +1,312 @@
+"""Pluggable softmax-head strategies (the paper's §3.2/§4.1 comparison as an
+API).
+
+The KDD'20 paper's core claim is a *comparison* of softmax variants — full,
+KNN softmax, selective softmax [Zhang et al., AAAI'18], MACH [Medini et al.,
+NeurIPS'19] — trained under identical hybrid-parallel conditions. This module
+makes the head a first-class strategy so any head composes with any trainer
+and any mesh:
+
+  * ``SoftmaxHead`` — the protocol. A head owns its trainable params AND its
+    auxiliary (non-trainable) state as pytrees, provides the
+    ``PartitionSpec``s that place both on a mesh, a shard_map-compatible
+    ``loss_local`` body, a distributed ``eval_logits_local`` prediction body,
+    its metrics spec, and an optional ``refresh`` for periodic work (KNN
+    graph rebuilds, LSH table rebuilds).
+  * ``HEAD_REGISTRY`` / ``register_head`` / ``make_head`` — the registry
+    keyed by ``HeadConfig.softmax_impl``; new heads (sampled softmax, CSoft
+    count-min, ...) plug in without touching any trainer.
+
+Trainers (``repro.train.hybrid`` faithfully, ``repro.train.gspmd`` for the
+zoo) call heads only through this protocol — no ``use_knn`` booleans, no
+head-specific branches.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import HeadConfig, ModelConfig, effective_vocab
+from repro.core import baselines as bl
+from repro.core import knn_graph as kg
+from repro.core.knn_softmax import knn_softmax_local
+from repro.core.sharded_softmax import (_normalize, full_softmax_local,
+                                        serve_logits_local)
+
+
+class HeadState(NamedTuple):
+    """A head's state: ``params`` are trained by the outer optimizer,
+    ``aux`` is head-owned non-trainable state (graphs, hash tables, ...)."""
+    params: Any
+    aux: Any
+
+
+class SoftmaxHead:
+    """Base strategy. Subclasses are stateless objects bound to configs;
+    all array state lives in the ``HeadState`` they create."""
+
+    name = "?"
+
+    def __init__(self, model_cfg: ModelConfig, head_cfg: HeadConfig):
+        self.model_cfg = model_cfg
+        self.head_cfg = head_cfg
+        self.n_classes = model_cfg.vocab_size
+        self.d = model_cfg.d_model
+        # padded-vocab masking (Megatron-style): labels < n_valid always
+        self.n_valid = (effective_vocab(model_cfg)
+                        if model_cfg.real_vocab_size else 0)
+
+    # -- state ------------------------------------------------------------
+    def init(self, key, n_dev: int) -> HeadState:
+        raise NotImplementedError
+
+    def params_spec(self, model_axis):
+        """Pytree of PartitionSpecs matching ``state.params``."""
+        raise NotImplementedError
+
+    def aux_spec(self, model_axis):
+        """Pytree of PartitionSpecs matching ``state.aux``."""
+        return ()
+
+    # -- shard_map bodies -------------------------------------------------
+    def loss_local(self, f_all, y_all, params, aux, *, model_axis,
+                   batch_axes, global_batch: int):
+        """Distributed CE on one device's shard. ``f_all``/``y_all`` are the
+        ring-gathered (global) batch; returns (loss, metrics)."""
+        raise NotImplementedError
+
+    def eval_logits_local(self, f_all, params, aux, *, model_axis):
+        """Deploy-style prediction (§4.5 retrieval equivalence). Returns
+        (pred [b] global class ids, local scores)."""
+        raise NotImplementedError
+
+    def metrics_spec(self) -> dict:
+        return {"accuracy": P(), "logz": P()}
+
+    # -- periodic work ----------------------------------------------------
+    @property
+    def refresh_every(self) -> int:
+        """Steps between ``refresh`` calls; 0 = no periodic work."""
+        return 0
+
+    def refresh(self, mesh, head_state: HeadState, *,
+                model_axis) -> HeadState:
+        """Rebuild aux state from the current params (no-op by default)."""
+        return head_state
+
+    # -- shared helpers ---------------------------------------------------
+    def _init_w(self, key, dtype=jnp.float32):
+        return (jax.random.normal(key, (self.n_classes, self.d))
+                / jnp.sqrt(self.d)).astype(dtype)
+
+
+HEAD_REGISTRY: dict = {}
+
+
+def register_head(name: str):
+    def deco(cls):
+        cls.name = name
+        HEAD_REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def make_head(model_cfg: ModelConfig, head_cfg: HeadConfig) -> SoftmaxHead:
+    try:
+        cls = HEAD_REGISTRY[head_cfg.softmax_impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown softmax_impl {head_cfg.softmax_impl!r}; registered: "
+            f"{sorted(HEAD_REGISTRY)}") from None
+    return cls(model_cfg, head_cfg)
+
+
+# ---------------------------------------------------------------------------
+# full softmax (paper baseline)
+# ---------------------------------------------------------------------------
+
+
+@register_head("full")
+class FullSoftmaxHead(SoftmaxHead):
+    """W [V, D] row-sharded; exact distributed softmax (§3.1)."""
+
+    def init(self, key, n_dev: int) -> HeadState:
+        return HeadState(params=self._init_w(key), aux=())
+
+    def params_spec(self, model_axis):
+        return P(model_axis, None)
+
+    def loss_local(self, f_all, y_all, params, aux, *, model_axis,
+                   batch_axes, global_batch):
+        return full_softmax_local(
+            f_all, y_all, params, model_axis=model_axis,
+            batch_axes=batch_axes, global_batch=global_batch,
+            cosine_scale=self.head_cfg.cosine_scale, n_valid=self.n_valid)
+
+    def eval_logits_local(self, f_all, params, aux, *, model_axis):
+        fn = _normalize(f_all.astype(jnp.float32))
+        wn = _normalize(params.astype(jnp.float32))
+        return serve_logits_local(fn, wn, model_axis=model_axis,
+                                  n_valid=self.n_valid)
+
+
+# ---------------------------------------------------------------------------
+# KNN softmax (the paper's contribution, §3.2)
+# ---------------------------------------------------------------------------
+
+
+@register_head("knn")
+class KNNSoftmaxHead(FullSoftmaxHead):
+    """Active classes from the compressed KNN graph of W; ``refresh``
+    rebuilds the exact graph on the training devices (§3.2.2)."""
+
+    def init(self, key, n_dev: int) -> HeadState:
+        w = self._init_w(key)
+        # warm-start graph before the first refresh: self-only neighbor
+        # lists (lossless by construction — every label selects itself)
+        import numpy as np
+        self_graph = np.arange(self.n_classes, dtype=np.int32)[:, None]
+        cg = kg.compress_graph(self_graph, n_dev)
+        return HeadState(params=w,
+                         aux=(cg.offsets, cg.neighbors, cg.ranks))
+
+    def aux_spec(self, model_axis):
+        return (P(model_axis, None),) * 3
+
+    @property
+    def refresh_every(self) -> int:
+        return self.head_cfg.rebuild_every
+
+    def refresh(self, mesh, head_state: HeadState, *,
+                model_axis) -> HeadState:
+        """Paper §3.2.2: suspend training, ring-build the exact KNN graph of
+        the CURRENT class weights, compress per shard (host round-trip for
+        CSR packing — an offline step in the paper)."""
+        import numpy as np
+        n_dev = mesh.shape[model_axis]
+        graph = kg.build_graph_distributed(
+            mesh, head_state.params, k=self.head_cfg.knn_k,
+            kprime=self.head_cfg.knn_kprime, model_axis=model_axis)
+        cg = kg.compress_graph(np.asarray(jax.device_get(graph)), n_dev)
+        sh = NamedSharding(mesh, P(model_axis, None))
+        aux = tuple(jax.device_put(a, sh)
+                    for a in (cg.offsets, cg.neighbors, cg.ranks))
+        return HeadState(params=head_state.params, aux=aux)
+
+    def loss_local(self, f_all, y_all, params, aux, *, model_axis,
+                   batch_axes, global_batch):
+        offsets, neighbors, ranks = aux
+        v_loc = params.shape[0]
+        m_local = max(8, int(v_loc * self.head_cfg.active_frac))
+        return knn_softmax_local(
+            f_all, y_all, params, offsets, neighbors, ranks,
+            model_axis=model_axis, batch_axes=batch_axes,
+            global_batch=global_batch, m_local=m_local,
+            k_cap=self.head_cfg.knn_k,
+            cosine_scale=self.head_cfg.cosine_scale,
+            pad_random=self.head_cfg.knn_pad_random, n_valid=self.n_valid)
+
+    def metrics_spec(self) -> dict:
+        return {"accuracy": P(), "logz": P(), "active_frac": P(),
+                "label_recall": P()}
+
+
+# ---------------------------------------------------------------------------
+# selective softmax [Zhang et al., AAAI'18] — LSH active classes
+# ---------------------------------------------------------------------------
+
+
+@register_head("selective")
+class SelectiveSoftmaxHead(FullSoftmaxHead):
+    """W [V, D] row-sharded + per-shard LSH tables; ``refresh`` rebuilds the
+    tables on the current weights (the baseline's table-refresh cadence)."""
+
+    def _build_tables(self, key, w, n_dev: int):
+        return bl.build_sharded_lsh_tables(
+            key, w, n_dev, self.head_cfg.selective_n_hash,
+            self.head_cfg.selective_n_bits)
+
+    def init(self, key, n_dev: int) -> HeadState:
+        kw, kt = jax.random.split(key)
+        w = self._init_w(kw)
+        planes, offsets, classes = self._build_tables(kt, w, n_dev)
+        return HeadState(params=w, aux=(planes, offsets, classes))
+
+    def aux_spec(self, model_axis):
+        return (P(), P(model_axis, None, None), P(model_axis, None, None))
+
+    @property
+    def refresh_every(self) -> int:
+        return self.head_cfg.rebuild_every
+
+    def refresh(self, mesh, head_state: HeadState, *,
+                model_axis) -> HeadState:
+        n_dev = mesh.shape[model_axis]
+        w = jax.device_get(head_state.params)
+        planes, offsets, classes = self._build_tables(
+            jax.random.PRNGKey(41), jnp.asarray(w), n_dev)
+        sh = NamedSharding(mesh, P(model_axis, None, None))
+        aux = (jax.device_put(planes, NamedSharding(mesh, P())),
+               jax.device_put(offsets, sh), jax.device_put(classes, sh))
+        return HeadState(params=head_state.params, aux=aux)
+
+    def loss_local(self, f_all, y_all, params, aux, *, model_axis,
+                   batch_axes, global_batch):
+        planes, offsets, classes = aux
+        v_loc = params.shape[0]
+        m_local = max(8, int(v_loc * self.head_cfg.active_frac))
+        return bl.selective_softmax_local(
+            f_all, y_all, params, planes, offsets, classes,
+            model_axis=model_axis, batch_axes=batch_axes,
+            global_batch=global_batch, m_local=m_local,
+            cap=self.head_cfg.selective_cap,
+            cosine_scale=self.head_cfg.cosine_scale)
+
+    def metrics_spec(self) -> dict:
+        return {"accuracy": P(), "logz": P(), "active_frac": P(),
+                "label_recall": P()}
+
+
+# ---------------------------------------------------------------------------
+# MACH [Medini et al., NeurIPS'19] — R hashed B-way softmaxes
+# ---------------------------------------------------------------------------
+
+
+@register_head("mach")
+class MACHSoftmaxHead(SoftmaxHead):
+    """R independent bucket heads [R, B, D] with the BUCKET axis sharded
+    over the model axis; static class->bucket hash tables replicated."""
+
+    def _n_buckets(self, n_dev: int) -> int:
+        # bucket axis must divide the ring
+        b = self.head_cfg.mach_b
+        return -(-b // n_dev) * n_dev
+
+    def init(self, key, n_dev: int) -> HeadState:
+        head = bl.init_mach(key, self.n_classes, self.d,
+                            n_buckets=self._n_buckets(n_dev),
+                            n_rep=self.head_cfg.mach_r)
+        return HeadState(params=head.w, aux=(head.hashes,))
+
+    def params_spec(self, model_axis):
+        return P(None, model_axis, None)
+
+    def aux_spec(self, model_axis):
+        return (P(),)
+
+    def loss_local(self, f_all, y_all, params, aux, *, model_axis,
+                   batch_axes, global_batch):
+        (hashes,) = aux
+        return bl.mach_softmax_local(
+            f_all, y_all, params, hashes, model_axis=model_axis,
+            batch_axes=batch_axes, global_batch=global_batch)
+
+    def eval_logits_local(self, f_all, params, aux, *, model_axis):
+        (hashes,) = aux
+        pred = bl.mach_predict_local(f_all, params, hashes,
+                                     model_axis=model_axis)
+        return pred, None

@@ -6,17 +6,43 @@ already keys leaves by tree path, so per-shard files compose). Restore takes
 a ``target`` template pytree (params/opt-state structure with NamedTuples)
 and refills its leaves, preserving shardings via device_put-like placement by
 the caller.
+
+zstd is optional: containers without the ``zstandard`` wheel fall back to
+stdlib zlib. Restore sniffs the frame magic, so either side can read files
+written by the other.
 """
 from __future__ import annotations
 
 import os
 import re
+import zlib
 from typing import Any, Optional
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # container without the wheel: stdlib fallback
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, level=6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "'zstandard' module is unavailable")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _key_str(path) -> str:
@@ -46,7 +72,7 @@ def save(path: str, tree: Any, step: int = 0) -> str:
     raw = msgpack.packb(payload, use_bin_type=True)
     fname = os.path.join(path, f"ckpt_{step}.msgpack.zst")
     with open(fname, "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+        f.write(_compress(raw))
     return fname
 
 
@@ -66,7 +92,7 @@ def restore(path: str, target: Any, step: Optional[int] = None):
             raise FileNotFoundError(f"no checkpoints under {path}")
     fname = os.path.join(path, f"ckpt_{step}.msgpack.zst")
     with open(fname, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     stored = payload["leaves"]
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(target)

@@ -1,0 +1,76 @@
+"""Compatibility layer: run the jax>=0.6-style codebase on older jax.
+
+The repo is written against the modern jax API surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``, ``jax.lax.pcast``, ``jax.lax.axis_size``). The
+pinned container ships jax 0.4.x, where those either live under
+``jax.experimental`` or do not exist yet. Importing :mod:`repro` installs
+thin forward-compatible aliases onto the ``jax`` module so one source tree
+runs on both. On a modern jax every patch below is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+
+import jax
+
+
+def _install() -> None:
+    # -- jax.shard_map (stable alias of jax.experimental.shard_map) -------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                      **kw):
+            if check_vma is not None:   # renamed from check_rep
+                kw.setdefault("check_rep", check_vma)
+            return _shard_map(f, mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    # -- jax.set_mesh (context-manager usage only) -------------------------
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+    # -- jax.sharding.AxisType + make_mesh(axis_types=...) ----------------
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            return _make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    # -- lax additions -----------------------------------------------------
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    if not hasattr(jax.lax, "pcast"):
+        # varying-ness annotation; with check_rep/check_vma off it is an
+        # identity at trace time
+        def pcast(x, axes, *, to=None):
+            return x
+
+        jax.lax.pcast = pcast
+
+
+_install()

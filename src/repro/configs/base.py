@@ -80,16 +80,24 @@ class ModelConfig:
 
 @dataclass(frozen=True)
 class HeadConfig:
-    """The paper's contribution: hybrid-parallel extreme-classification head."""
+    """The paper's contribution: hybrid-parallel extreme-classification head.
+
+    ``softmax_impl`` selects a registered ``repro.api.SoftmaxHead`` strategy;
+    ``rebuild_every`` is the head's ``refresh`` cadence (graph rebuild for
+    knn, LSH-table rebuild for selective; a no-op for heads without periodic
+    work)."""
     softmax_impl: str = "full"     # full | knn | selective | mach
+    cosine_scale: float = 16.0     # normalized-logit scale (§3.2.1); 0 = raw
     # KNN softmax (paper §3.2)
     knn_k: int = 16                # neighbors per class in the graph
     knn_kprime: int = 32           # recall k' > k in bf16 pass, re-rank fp32
     active_frac: float = 0.10      # M = active_frac * N (paper: "10% active classes")
-    rebuild_every: int = 0         # steps between graph rebuilds (0 = never/manual)
+    rebuild_every: int = 0         # steps between refreshes (0 = never/manual)
+    knn_pad_random: bool = True    # paper line 7 random filler classes
     # selective softmax baseline (HF-A)
     selective_n_hash: int = 4
     selective_n_bits: int = 8
+    selective_cap: int = 32        # per-bucket candidate gather cap
     # MACH baseline
     mach_b: int = 64               # buckets
     mach_r: int = 4                # repetitions

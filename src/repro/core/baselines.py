@@ -22,7 +22,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.sharded_softmax import _normalize
+from repro.core.sharded_softmax import (_finish_ce, _flat_axis_index,
+                                        _normalize)
 
 # ---------------------------------------------------------------------------
 # selective softmax (LSH active classes)
@@ -141,3 +142,187 @@ def mach_predict(head: MACHHead, f):
             axis=2),
         axis=0)                                     # [batch, N]
     return jnp.argmax(class_scores, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# distributed (shard_map) counterparts — hybrid-parallel baselines so the
+# Table-2 comparison trains all four heads under identical mesh conditions
+# ---------------------------------------------------------------------------
+
+
+def build_sharded_lsh_tables(key, w, n_shards: int, n_tables: int,
+                             n_bits: int):
+    """Per-model-shard LSH tables over the row shards of ``w`` [V, D].
+
+    One shared set of hyperplanes (so every shard hashes features the same
+    way); per-shard bucket CSR over LOCAL class ids. Each local class lands
+    in exactly one bucket per table, so nnz per (shard, table) is exactly
+    V_loc — the CSR needs no padding.
+
+    Returns arrays placeable on the mesh:
+      planes  [R, D, n_bits]          replicated
+      offsets [P, R, n_buckets+1]     sharded over the model axis
+      classes [P, R, V_loc]           sharded over the model axis
+    """
+    v, d = w.shape
+    assert v % n_shards == 0, f"V={v} not divisible by shards={n_shards}"
+    v_loc = v // n_shards
+    planes = jax.random.normal(key, (n_tables, d, n_bits), jnp.float32)
+    n_buckets = 1 << n_bits
+
+    def one_shard(wp):
+        wn = _normalize(wp).astype(jnp.float32)
+        bits = jnp.einsum("nd,rdb->rnb", wn, planes) > 0
+        bucket = jnp.sum(bits * (1 << jnp.arange(n_bits)), axis=-1)  # [R,V_loc]
+        order = jnp.argsort(bucket, axis=1)
+        classes = jnp.take_along_axis(
+            jnp.broadcast_to(jnp.arange(v_loc, dtype=jnp.int32)[None],
+                             (n_tables, v_loc)), order, axis=1)
+        sorted_b = jnp.take_along_axis(bucket, order, axis=1)
+        offsets = jax.vmap(
+            lambda sb: jnp.searchsorted(sb, jnp.arange(n_buckets + 1))
+        )(sorted_b).astype(jnp.int32)
+        return offsets, classes
+
+    offsets, classes = jax.vmap(one_shard)(
+        w.astype(jnp.float32).reshape(n_shards, v_loc, d))
+    return planes, offsets, classes
+
+
+def selective_softmax_local(
+    f_loc, y_loc, w_loc, planes, offsets_loc, classes_loc, *,
+    model_axis, batch_axes, global_batch: int, m_local: int, cap: int,
+    cosine_scale: float = 16.0,
+):
+    """shard_map body for the selective-softmax loss (HF-A flavored),
+    counterpart of ``full_softmax_local``.
+
+    Each model shard selects up to ``m_local`` active LOCAL classes: the
+    union of the LSH buckets hit by every feature in the (gathered) batch,
+    force-including the labels this shard owns, then completes the
+    distributed CE with the usual pmax/psum pair. LSH recall is imperfect,
+    so non-label neighbors can be missing from Z — the accuracy gap the
+    paper's Table 2 shows.
+
+    offsets_loc [1, R, n_buckets+1] / classes_loc [1, R, V_loc] arrive with
+    the leading model-shard axis; planes [R, D, n_bits] are replicated.
+    """
+    offsets = offsets_loc.reshape(offsets_loc.shape[-2:])
+    classes = classes_loc.reshape(classes_loc.shape[-2:])
+    v_loc = w_loc.shape[0]
+    v_start = _flat_axis_index(model_axis) * v_loc
+    y_rel = (y_loc - v_start).astype(jnp.int32)
+    owned_label = (y_rel >= 0) & (y_rel < v_loc)
+    y_local = jnp.where(owned_label, y_rel, -1)
+
+    # hash every feature through the shared planes, gather local candidates
+    fn = _normalize(f_loc).astype(jnp.float32)
+    n_bits = planes.shape[-1]
+    bits = jnp.einsum("bd,rdk->rbk", fn, planes) > 0
+    bucket = jnp.sum(bits * (1 << jnp.arange(n_bits)), axis=-1)      # [R, b]
+    lo = jnp.take_along_axis(offsets, bucket, axis=1)
+    hi = jnp.take_along_axis(offsets, bucket + 1, axis=1)
+    iota = jnp.arange(cap, dtype=jnp.int32)
+    take = lo[..., None] + iota                                      # [R,b,cap]
+    nnz = classes.shape[1]
+    r_idx = jnp.arange(classes.shape[0])[:, None, None]
+    cand = classes[r_idx, jnp.clip(take, 0, nnz - 1)]
+    cand = jnp.where(take < hi[..., None], cand, -1).reshape(-1)
+    cand = jnp.concatenate([y_local, cand])          # force owned labels in
+
+    # dedup; keep labels unconditionally, then highest-score candidates
+    sid = jnp.sort(cand)
+    first = jnp.concatenate([jnp.array([True]), sid[1:] != sid[:-1]])
+    valid = first & (sid >= 0)
+    ylab = jnp.sort(y_local)
+    pos = jnp.searchsorted(ylab, sid)
+    is_label = ylab[jnp.clip(pos, 0, ylab.shape[0] - 1)] == sid
+    score = jnp.where(valid, jnp.where(is_label, 2, 1), 0)
+    take_n = min(m_local, score.shape[0])
+    top_score, top_pos = jax.lax.top_k(score, take_n)
+    ids = sid[top_pos]
+    mask = top_score > 0
+    if take_n < m_local:
+        pad = m_local - take_n
+        ids = jnp.concatenate([ids, jnp.zeros((pad,), ids.dtype)])
+        mask = jnp.concatenate([mask, jnp.zeros((pad,), bool)])
+    ids = jnp.where(mask, ids, 0).astype(jnp.int32)
+
+    dt = f_loc.dtype
+    f = _normalize(f_loc)
+    w_act = _normalize(w_loc[ids])
+    logits = jnp.einsum("bd,md->bm", f, w_act.astype(dt),
+                        preferred_element_type=jnp.float32) * cosine_scale
+    logits = jnp.where(mask[None, :], logits, -1e30)
+
+    hit = (ids[None, :] == y_rel[:, None]) & mask[None, :]
+    lpos = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    owned = owned_label & jnp.any(hit, axis=1)
+    loss, metrics = _finish_ce(logits, lpos, owned, model_axis,
+                               tuple(batch_axes), 1.0 / global_batch)
+    max_t = model_axis if isinstance(model_axis, tuple) else (model_axis,)
+    metrics["active_frac"] = jax.lax.pmean(
+        jnp.mean(mask.astype(jnp.float32)), max_t + tuple(batch_axes))
+    found = jax.lax.psum(owned.astype(jnp.float32), model_axis)
+    metrics["label_recall"] = jax.lax.psum(
+        jnp.sum(found), tuple(batch_axes)) / global_batch
+    return loss, metrics
+
+
+def mach_softmax_local(f_loc, y_loc, w_loc, hashes, *, model_axis,
+                       batch_axes, global_batch: int):
+    """shard_map body for the MACH loss: R independent B-way softmaxes with
+    the BUCKET axis sharded over the model axis (log-memory per device).
+
+    w_loc [R, B_loc, D] local bucket shards; hashes [R, N] replicated. Each
+    rep's CE is completed distributedly by folding the rep axis into the
+    batch of the shared CE tail; the returned loss matches ``mach_loss``
+    (mean over samples of the sum of R bucket CEs).
+    """
+    fl = f_loc.astype(jnp.float32)
+    logits = jnp.einsum("bd,rkd->rbk", fl, w_loc.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)  # [R, b, B_loc]
+    n_rep, b, b_loc = logits.shape
+    b_start = _flat_axis_index(model_axis) * b_loc
+    ybuck = hashes[:, y_loc]                                  # [R, b] global
+    rel = (ybuck - b_start).astype(jnp.int32)
+    owned = (rel >= 0) & (rel < b_loc)
+    loss, metrics = _finish_ce(
+        logits.reshape(n_rep * b, b_loc),
+        jnp.clip(rel, 0, b_loc - 1).reshape(n_rep * b),
+        owned.reshape(n_rep * b), model_axis, tuple(batch_axes),
+        1.0 / global_batch)
+    metrics = dict(metrics)
+    # CE-tail accuracy counted one hit per (rep, sample): report the
+    # per-rep mean bucket accuracy
+    metrics["accuracy"] = metrics["accuracy"] / n_rep
+    return loss, metrics
+
+
+def mach_predict_local(f_loc, w_loc, hashes, *, model_axis):
+    """Distributed MACH inference: [b] class predictions.
+
+    Per-rep distributed softmax over the sharded buckets (pmax/psum), then
+    each shard contributes P_r(hash_r(j)) for the classes whose bucket it
+    owns; one psum over the model axis assembles the full [b, N] score.
+    """
+    fl = f_loc.astype(jnp.float32)
+    logits = jnp.einsum("bd,rkd->rbk", fl, w_loc.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)  # [R, b, B_loc]
+    b_loc = logits.shape[-1]
+    m = jax.lax.pmax(jnp.max(logits, axis=-1), model_axis)    # [R, b]
+    z = jax.lax.psum(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1),
+                     model_axis)
+    probs = jnp.exp(logits - m[..., None]) / z[..., None]     # local buckets
+    b_start = _flat_axis_index(model_axis) * b_loc
+    rel = hashes - b_start                                    # [R, N]
+    local = (rel >= 0) & (rel < b_loc)
+    idx = jnp.clip(rel, 0, b_loc - 1)
+    # accumulate per rep: peak memory [b, N], not [R, b, N] (MACH's whole
+    # point is log-memory — don't give it back at eval time)
+    scores = jnp.zeros((probs.shape[1], hashes.shape[1]), jnp.float32)
+    for r in range(probs.shape[0]):
+        sc = probs[r][:, idx[r]]                              # [b, N]
+        scores = scores + jnp.where(local[r][None, :], sc, 0.0)
+    scores = jax.lax.psum(scores, model_axis)                 # [b, N]
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)

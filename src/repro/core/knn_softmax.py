@@ -30,7 +30,7 @@ BIG_RANK = 1 << 20
 
 
 def select_active(
-    y_loc, offsets, neighbors, *, v_start, v_loc, m_local: int, k_cap: int,
+    y_loc, offsets, neighbors, *, v_loc, m_local: int, k_cap: int,
     pad_random: bool = True, seed_salt=0, ranks=None,
 ):
     """Fixed-shape Algorithm 1 on one model shard.
@@ -108,8 +108,8 @@ def knn_softmax_local(
     v_start = _flat_axis_index(model_axis) * v_loc
 
     ids, valid = select_active(
-        y_loc, offsets, neighbors, v_start=v_start, v_loc=v_loc,
-        m_local=m_local, k_cap=k_cap, pad_random=pad_random, ranks=ranks)
+        y_loc, offsets, neighbors, v_loc=v_loc, m_local=m_local,
+        k_cap=k_cap, pad_random=pad_random, ranks=ranks)
 
     dt = f_loc.dtype
     f = _normalize(f_loc)

@@ -46,7 +46,6 @@ def ce_ref(features, labels, w, *, cosine_scale: float = 0.0,
     if cosine_scale > 0:
         logits = logits * cosine_scale
     logz = jax.nn.logsumexp(logits, axis=-1)
-    n = w.shape[0]
     corr = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
     if label_smoothing > 0:
         mean_logit = jnp.mean(logits, axis=-1)

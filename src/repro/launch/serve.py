@@ -1,94 +1,74 @@
-"""Serving launcher: batched greedy decoding with the sharded-vocab head.
+"""Serving launcher — a thin argparse shim over ``repro.api.Experiment``.
 
 The paper deploys the trained 100M-class fc as a retrieval index (§4.5 —
-nearest class weight). ``serve_logits_local``'s distributed argmax IS that
-nearest-neighbor lookup, executed on the training mesh. For the LM zoo this
-becomes standard batched token serving: prefill once, then decode steps.
+nearest class weight); ``Experiment.serve`` on the paper system IS that
+lookup, executed on the training mesh with whatever head is configured
+(hashed-bucket vote for MACH). On the zoo system it is standard batched
+token serving: prefill once, then greedy decode steps through the KV/SSM
+cache and the sharded-vocab argmax.
 
   PYTHONPATH=src python -m repro.launch.serve --devices 8 \
       --arch smollm_135m --reduced --prompt-len 32 --gen 16 --batch 8
+  PYTHONPATH=src python -m repro.launch.serve --devices 8 --system paper \
+      --classes 4096 --head knn --batch 64
 """
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 import time
 
 
 def main(argv=None):
     p = argparse.ArgumentParser()
+    p.add_argument("--system", choices=["paper", "zoo"], default="zoo")
     p.add_argument("--devices", type=int, default=0)
+    # zoo
     p.add_argument("--arch", default="smollm_135m")
     p.add_argument("--reduced", action="store_true")
-    p.add_argument("--batch", type=int, default=8)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=16)
+    # paper
+    p.add_argument("--classes", type=int, default=4096)
+    p.add_argument("--feat-dim", type=int, default=64)
+    p.add_argument("--head", choices=["full", "knn", "selective", "mach"],
+                   default="full")
+    # shared
+    p.add_argument("--batch", type=int, default=8)
     args = p.parse_args(argv)
-    if args.devices:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.devices}")
-    import dataclasses
 
-    import jax
-    import jax.numpy as jnp
+    from repro.api.bootstrap import ensure_host_devices
+    ensure_host_devices(args.devices)
+    from repro.api import Experiment
+    from repro.configs.base import HeadConfig
 
-    from repro.configs.base import InputShape, get_model_config, pad_vocab
-    from repro.data.synthetic import lm_batch
-    from repro.launch.mesh import make_host_mesh, make_host_parallel_config
-    from repro.models import lm
-    from repro.models import decoder as dec_lib
-    from repro.train import gspmd
-
-    n_dev = len(jax.devices())
-    n_model = min(4, n_dev)
-    mesh = make_host_mesh(n_dev // n_model, n_model)
-    par = make_host_parallel_config(n_dev // n_model, n_model)
-    cfg = get_model_config(args.arch, reduced=args.reduced)
-    if args.reduced:
-        cfg = dataclasses.replace(cfg, dtype="float32")
-    cfg = pad_vocab(cfg, n_model)
-    if cfg.family == "encdec":
-        print("serve demo supports decoder-only archs; whisper decoding is "
-              "exercised in tests/test_serving.py")
+    if args.system == "paper":
+        exp = Experiment.from_config(
+            system="paper", classes=args.classes, feat_dim=args.feat_dim,
+            batch=args.batch, head=HeadConfig(softmax_impl=args.head),
+            log_every=0)
+        t0 = time.perf_counter()
+        preds = exp.serve(batch=args.batch)
+        dt = time.perf_counter() - t0
+        print(f"[serve] {args.head}-head retrieval over {args.classes} "
+              f"classes: {preds.shape[0]} queries in {dt*1e3:.1f} ms")
+        print("[serve] first predictions:", preds[:8].tolist())
         return 0
 
-    total = args.prompt_len + args.gen
-    pshape = InputShape("serve-prefill", args.prompt_len, args.batch, "prefill")
-    dshape = InputShape("serve-decode", total, args.batch, "decode")
-    params = lm.init_model(jax.random.PRNGKey(0), cfg)
-    with jax.set_mesh(mesh):
-        shards = gspmd.param_shardings(cfg, par, mesh)
-        params = jax.tree.map(jax.device_put, params, shards)
-        prompts = lm_batch(0, args.batch, args.prompt_len,
-                           cfg.real_vocab_size or cfg.vocab_size)
-        window = lm.decode_window(cfg, total)
-        prefill = jax.jit(gspmd.make_prefill_step(cfg, par, mesh, dshape))
-        serve = jax.jit(gspmd.make_serve_step(cfg, par, mesh, dshape))
+    exp = Experiment.from_config(system="zoo", arch=args.arch,
+                                 reduced=args.reduced, batch=args.batch,
+                                 seq=args.prompt_len + args.gen)
+    try:
         t0 = time.perf_counter()
-        tok, caches = prefill(params, {"tokens": prompts["tokens"]})
-        # grow prefill caches (length prompt_len) into the decode window
-        def grow(c):
-            if c.ndim >= 3 and c.shape[2] == args.prompt_len:
-                pad = [(0, 0)] * c.ndim
-                pad[2] = (0, window - args.prompt_len)
-                return jnp.pad(c, pad)
-            return c
-        if cfg.family != "ssm":
-            caches = jax.tree.map(grow, caches)
-        slots = dec_lib.init_cache_slots(
-            cfg, window, prefill_positions=jnp.arange(args.prompt_len))
-        out = [tok]
-        tok = tok[:, None]
-        for i in range(args.gen - 1):
-            tok, caches, slots = serve(params, caches, slots, tok)
-            out.append(tok[:, 0])
+        gen = exp.serve(prompt_len=args.prompt_len, gen=args.gen,
+                        batch=args.batch)
         dt = time.perf_counter() - t0
-        gen = jnp.stack(out, axis=1)
-        print(f"[serve] generated {gen.shape} tokens in {dt*1e3:.1f} ms "
-              f"({args.batch * args.gen / dt:.1f} tok/s)")
-        print("[serve] first row:", gen[0].tolist())
+    except NotImplementedError as e:
+        print(f"[serve] {e}")
+        return 0
+    print(f"[serve] generated {gen.shape} tokens in {dt*1e3:.1f} ms "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("[serve] first row:", gen[0].tolist())
     return 0
 
 

@@ -1,25 +1,24 @@
-"""Training launcher.
+"""Training launcher — a thin argparse shim over ``repro.api.Experiment``.
 
-Two entry modes:
+Two systems behind one entry point:
   * ``--system paper`` — the faithful hybrid-parallel trainer (FE data
-    parallel + fc model parallel on a 1-D ring) with KNN softmax / DGC /
-    FCCS toggles. This is the paper's system end to end.
+    parallel + fc model parallel on a 1-D ring) with ANY registered softmax
+    head (``--head full|knn|selective|mach``) plus DGC / FCCS toggles.
   * ``--system zoo`` — the GSPMD trainer for any assigned architecture
     (``--arch``), tensor/expert parallel on a (data, model) mesh.
 
 On this CPU container use --devices N to get N fake devices (the flag must
-be set before jax initializes, which this script does in main()).
+be set before jax initializes; ``ensure_host_devices`` handles that).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --system paper --devices 8 \
-      --classes 4096 --steps 200 --knn --fccs
+      --classes 4096 --steps 200 --head knn --fccs
   PYTHONPATH=src python -m repro.launch.train --system zoo --devices 8 \
       --arch smollm_135m --reduced --steps 20
 """
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 
 
@@ -31,7 +30,10 @@ def parse_args(argv=None):
     # paper system
     p.add_argument("--classes", type=int, default=4096)
     p.add_argument("--feat-dim", type=int, default=64)
-    p.add_argument("--knn", action="store_true")
+    p.add_argument("--head", choices=["full", "knn", "selective", "mach"],
+                   default="full", help="softmax head strategy")
+    p.add_argument("--knn", action="store_true",
+                   help="back-compat alias for --head knn")
     p.add_argument("--dgc", action="store_true")
     p.add_argument("--fccs", action="store_true")
     p.add_argument("--trunk", choices=["feats", "cnn"], default="feats")
@@ -50,33 +52,18 @@ def parse_args(argv=None):
 
 def main(argv=None):
     args = parse_args(argv)
-    if args.devices:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.devices}")
-    import jax  # noqa: E402  (after XLA_FLAGS)
+    from repro.api.bootstrap import ensure_host_devices
+    ensure_host_devices(args.devices)
 
+    from repro.api import Experiment
     from repro.configs.base import (DGCConfig, FCCSConfig, HeadConfig,
-                                    ModelConfig, TrainConfig,
-                                    get_model_config, pad_vocab)
-    from repro.data.synthetic import (ClassificationStream, lm_batch,
-                                      sku_feature_batch, sku_image_batch)
+                                    TrainConfig)
 
     if args.system == "paper":
-        from repro.train import hybrid
-        from repro.train.trainer import PaperTrainer
-        n_dev = len(jax.devices())
-        mesh = hybrid.make_hybrid_mesh(n_dev)
-        if args.trunk == "feats":
-            mcfg = ModelConfig(name="paper-feats", family="feats", n_layers=0,
-                               d_model=args.feat_dim, n_heads=0, n_kv_heads=0,
-                               d_ff=0, vocab_size=args.classes, dtype="float32")
-        else:
-            from repro.configs import sku100m_resnet
-            mcfg = sku100m_resnet.reduced(args.classes)
-        hcfg = HeadConfig(softmax_impl="knn" if args.knn else "full",
-                          knn_k=16, knn_kprime=32, active_frac=0.1,
-                          rebuild_every=100)
+        # --knn is a back-compat alias; an explicit non-default --head wins
+        impl = "knn" if (args.knn and args.head == "full") else args.head
+        hcfg = HeadConfig(softmax_impl=impl, knn_k=16, knn_kprime=32,
+                          active_frac=0.1, rebuild_every=100)
         fcfg = FCCSConfig(eta0=args.lr, t_warm=max(1, args.steps // 10),
                           b0=args.batch, b_min=args.batch,
                           b_max=args.batch * 8,
@@ -84,64 +71,26 @@ def main(argv=None):
         tcfg = TrainConfig(optimizer=args.optimizer, fccs=fcfg,
                            dgc=DGCConfig(enabled=args.dgc, sparsity=0.99,
                                          chunk=2048))
-        stream = ClassificationStream(args.classes, args.feat_dim)
-        if args.trunk == "feats":
-            data_fn = lambda t, b: sku_feature_batch(t, b, stream)
-        else:
-            data_fn = lambda t, b: sku_image_batch(t, b, args.classes)
-        trainer = PaperTrainer(mcfg, hcfg, tcfg, mesh, data_fn,
-                               hw_batch=args.batch, use_knn=args.knn,
-                               ckpt_dir=args.ckpt_dir or None, ckpt_every=50)
-        trainer.run(args.steps, use_fccs_batch=args.fccs)
-        acc = trainer.evaluate(data_fn(10**6, args.batch * 4))
+        exp = Experiment.from_config(
+            system="paper", trunk=args.trunk, classes=args.classes,
+            feat_dim=args.feat_dim, batch=args.batch, head=hcfg, train=tcfg,
+            ckpt_dir=args.ckpt_dir or None, ckpt_every=50)
+        exp.fit(args.steps, use_fccs_batch=args.fccs)
+        acc = exp.evaluate(eval_batch=args.batch * 4)
         print(f"[train] final eval accuracy: {acc:.4f}")
         return 0
 
-    # ---- zoo ------------------------------------------------------------
-    import dataclasses
-
-    import jax.numpy as jnp
-    from repro.configs.base import InputShape
-    from repro.launch.mesh import make_host_mesh, make_host_parallel_config
-    from repro.models import lm
-    from repro.optim import make_optimizer
-    from repro.train import gspmd
-
-    n_dev = len(jax.devices())
-    n_model = min(4, n_dev)
-    n_data = n_dev // n_model
-    mesh = make_host_mesh(n_data, n_model)
-    par = make_host_parallel_config(n_data, n_model)
-    cfg = get_model_config(args.arch, reduced=args.reduced)
-    if args.reduced:
-        cfg = dataclasses.replace(cfg, dtype="float32")
-    cfg = pad_vocab(cfg, n_model)
-    shape = InputShape("cli", args.seq, args.batch, "train")
-    hcfg = HeadConfig()
-    tcfg = TrainConfig(optimizer=args.optimizer)
-    params = lm.init_model(jax.random.PRNGKey(0), cfg)
-    with jax.set_mesh(mesh):
-        shards = gspmd.param_shardings(cfg, par, mesh)
-        params = jax.tree.map(jax.device_put, params, shards)
-        opt = make_optimizer(tcfg)
-        opt_state = opt.init(params)
-        step = jax.jit(gspmd.make_train_step(cfg, hcfg, par, tcfg, mesh, shape))
-        for t in range(args.steps):
-            inputs = lm_batch(t, args.batch, args.seq,
-                              cfg.real_vocab_size or cfg.vocab_size)
-            if cfg.family == "encdec":
-                inputs["frames"] = jax.random.normal(
-                    jax.random.PRNGKey(t), (args.batch, cfg.enc_seq,
-                                            cfg.d_model), jnp.float32)
-            params, opt_state, loss, metrics = step(params, opt_state,
-                                                    inputs, args.lr)
-            if t % 10 == 0:
-                print(f"[zoo] step={t} loss={float(loss):.4f} "
-                      f"acc={float(metrics['accuracy']):.3f}")
-    if args.ckpt_dir:
-        from repro import checkpoint as ckpt
-        ckpt.save(args.ckpt_dir, params, step=args.steps)
-        print(f"[zoo] checkpoint written to {args.ckpt_dir}")
+    impl = "knn" if (args.knn and args.head == "full") else args.head
+    exp = Experiment.from_config(
+        system="zoo", arch=args.arch, reduced=args.reduced,
+        batch=args.batch, seq=args.seq,
+        head=HeadConfig(softmax_impl=impl, knn_k=16, knn_kprime=32,
+                        active_frac=0.1, rebuild_every=100),
+        train=TrainConfig(optimizer=args.optimizer),
+        ckpt_dir=args.ckpt_dir or None)
+    exp.fit(args.steps, lr=args.lr)
+    acc = exp.evaluate()
+    print(f"[zoo] final next-token accuracy: {acc:.4f}")
     return 0
 
 

@@ -160,6 +160,7 @@ def batch_pspec(par: ParallelConfig):
 def make_loss_fn(model_cfg: ModelConfig, head_cfg: HeadConfig,
                  par: ParallelConfig, mesh, *, global_tokens: int,
                  use_knn: bool = False, m_local: int = 0):
+    use_knn = use_knn or head_cfg.softmax_impl == "knn"
     sharder = make_sharder(mesh, par)
     # vocab may be sharded over one axis ("model") or several (the paper's
     # 1-D layout: every chip an fc shard — rule override vocab=data,model)
@@ -242,6 +243,7 @@ def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
                     n_micro: Optional[int] = None):
     from repro.core.pipeline import microbatched_value_and_grad
 
+    use_knn = use_knn or head_cfg.softmax_impl == "knn"
     if n_micro is None:
         n_micro = (train_cfg.micro_batch
                    or auto_micro_batches(model_cfg, par, shape))

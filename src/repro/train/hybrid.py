@@ -3,43 +3,42 @@
 Layout = the paper's exactly, generalized to a 1-D device ring ("hybrid"
 axis over all chips): every device is BOTH a data-parallel FE replica (FE
 params replicated; batch sharded over the ring) AND a model-parallel fc
-shard (W row-sharded over the ring). Per (micro-)batch:
+shard (head params sharded over the ring). Per (micro-)batch:
 
   FE local forward -> all-gather features along the ring -> each device
-  scores the whole (micro-)batch against its class shard -> distributed
-  softmax (pmax/psum) -> backward; fc grads STAY LOCAL; FE grads cross the
+  scores the whole (micro-)batch against its head shard -> distributed
+  softmax (pmax/psum) -> backward; head grads STAY LOCAL; FE grads cross the
   ring once per step — dense psum or DGC top-k sparsified (§3.3.2).
 
 Micro-batching (§3.3.1) runs as a lax.scan whose per-iteration all-gather the
 XLA latency-hiding scheduler overlaps with the next iteration's FE compute;
 it is also FCCS's gradient-accumulation mechanism (n× batch growth).
 
+The softmax head is a pluggable ``repro.api.SoftmaxHead`` strategy (full /
+knn / selective / mach / ...): the head owns its trainable params, its aux
+state (graphs, hash tables), the PartitionSpecs that place both on the ring,
+and its shard_map loss body. The step builders below are head-agnostic —
+no ``use_knn`` booleans, no head-specific branches.
+
 Everything is a single shard_map over the full mesh — all collectives
 explicit, nothing left to GSPMD — so the HLO *is* the paper's Fig. 2/4.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.api.heads import HeadState, SoftmaxHead, make_head
 from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
-from repro.core import knn_graph as kg
 from repro.core import sparsify as sp
-from repro.core.knn_softmax import knn_softmax_local
 from repro.core.pipeline import microbatched_value_and_grad
-from repro.core.sharded_softmax import full_softmax_local, serve_logits_local
 from repro.models import lm
 from repro.optim import apply_updates, make_optimizer
 
 AXIS = "hybrid"
-
-FULL_METRICS = {"accuracy": P(), "logz": P()}
-KNN_METRICS = {"accuracy": P(), "logz": P(), "active_frac": P(),
-               "label_recall": P()}
 
 
 def make_hybrid_mesh(n_dev: Optional[int] = None):
@@ -50,21 +49,29 @@ def make_hybrid_mesh(n_dev: Optional[int] = None):
 
 class HybridState(NamedTuple):
     fe_params: dict        # replicated
-    w_head: jax.Array      # [V, D] sharded over AXIS (rows)
+    head_params: Any       # head-owned trainable pytree, sharded by the head
+    head_aux: Any          # head-owned non-trainable pytree (graph/tables)
     opt_state: object
     dgc: Optional[sp.DGCState]   # leaves carry leading [n_dev] axis
     step: jax.Array
 
+    @property
+    def w_head(self):
+        """The [V, D] class-weight matrix, for heads whose params are one
+        array (full/knn/selective). Deploy/eval code reads this."""
+        return self.head_params
+
 
 def init_state(key, model_cfg: ModelConfig, head_cfg: HeadConfig,
-               train_cfg: TrainConfig, n_dev: int) -> HybridState:
+               train_cfg: TrainConfig, n_dev: int, *,
+               head: Optional[SoftmaxHead] = None) -> HybridState:
+    head = head or make_head(model_cfg, head_cfg)
     k1, k2 = jax.random.split(key)
     fe_params = lm.init_model(k1, model_cfg)
     fe_params.pop("head", None)   # the fc lives separately, sharded
-    w_head = (jax.random.normal(k2, (model_cfg.vocab_size, model_cfg.d_model))
-              / jnp.sqrt(model_cfg.d_model)).astype(jnp.float32)
+    hs = head.init(k2, n_dev)
     opt = make_optimizer(train_cfg)
-    opt_state = opt.init((fe_params, w_head))
+    opt_state = opt.init((fe_params, hs.params))
     dgc = None
     if train_cfg.dgc.enabled:
         z = sp.init_dgc_state(fe_params)
@@ -72,20 +79,29 @@ def init_state(key, model_cfg: ModelConfig, head_cfg: HeadConfig,
             u=jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_dev,) + a.shape), z.u),
             v=jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_dev,) + a.shape), z.v),
         )
-    return HybridState(fe_params, w_head, opt_state, dgc,
+    return HybridState(fe_params, hs.params, hs.aux, opt_state, dgc,
                        jnp.zeros((), jnp.int32))
 
 
-def state_specs(state: HybridState):
+def refresh_head_state(head: SoftmaxHead, mesh,
+                       state: HybridState) -> HybridState:
+    """Run the head's periodic work (graph/table rebuild) on the current
+    params; no-op for heads without any."""
+    hs = head.refresh(mesh, HeadState(state.head_params, state.head_aux),
+                      model_axis=AXIS)
+    return state._replace(head_params=hs.params, head_aux=hs.aux)
+
+
+def state_specs(state: HybridState, head: SoftmaxHead):
     fe_spec = jax.tree.map(lambda _: P(), state.fe_params)
-    w_spec = P(AXIS, None)
+    hp_spec = head.params_spec(AXIS)
     opt_spec = jax.tree.map(lambda _: P(), state.opt_state)
-    # opt moments mirror the (fe, w) tuple: redo specs for mu/nu leaves
+    # opt moments mirror the (fe, head_params) tuple: redo specs for mu/nu
     def moment_spec(tree):
         if tree is None:
             return None
         fe_m = jax.tree.map(lambda _: P(), tree[0])
-        return (fe_m, w_spec)
+        return (fe_m, hp_spec)
     opt_spec = type(state.opt_state)(
         step=P(), mu=moment_spec(state.opt_state.mu),
         nu=moment_spec(getattr(state.opt_state, "nu", None)))
@@ -94,7 +110,8 @@ def state_specs(state: HybridState):
         dgc_spec = sp.DGCState(
             u=jax.tree.map(lambda _: P(AXIS), state.dgc.u),
             v=jax.tree.map(lambda _: P(AXIS), state.dgc.v))
-    return HybridState(fe_spec, w_spec, opt_spec, dgc_spec, P())
+    return HybridState(fe_spec, hp_spec, head.aux_spec(AXIS), opt_spec,
+                       dgc_spec, P())
 
 
 def _flat_features_and_labels(model_cfg, fe_params, micro_inputs):
@@ -109,45 +126,44 @@ def _flat_features_and_labels(model_cfg, fe_params, micro_inputs):
     return f, labels, aux
 
 
+def _flat_features(model_cfg, fe_params, micro_inputs):
+    """Label-free FE forward (serving): flat [t_loc, D] features."""
+    if model_cfg.family == "feats":
+        return micro_inputs["features"].astype(jnp.dtype(model_cfg.dtype))
+    h, _, _ = lm.backbone(fe_params, model_cfg, micro_inputs)
+    return h.reshape(-1, h.shape[-1])
+
+
 def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
                     train_cfg: TrainConfig, mesh, *, n_micro: int = 1,
-                    use_knn: bool = False, state_template: HybridState = None):
-    """Returns jitted step(state, inputs, graph, lr) -> (state, loss, metrics).
+                    head: Optional[SoftmaxHead] = None,
+                    state_template: HybridState = None):
+    """Returns jitted step(state, inputs, lr) -> (state, loss, metrics).
 
-    inputs are GLOBAL arrays batch-sharded over the ring; ``graph`` is the
-    sharded CompressedGraph (ignored unless use_knn).
+    inputs are GLOBAL arrays batch-sharded over the ring; the head's aux
+    state (graph/tables) travels inside ``state`` with head-provided specs.
     """
+    head = head or make_head(model_cfg, head_cfg)
     n_dev = mesh.shape[AXIS]
     opt = make_optimizer(train_cfg)
     dcfg = train_cfg.dgc
-    m_local = 0
-    if use_knn:
-        v_loc = model_cfg.vocab_size // n_dev
-        m_local = max(8, int(v_loc * head_cfg.active_frac))
 
-    def body(fe_params, w_head, opt_state, dgc_u, dgc_v, offsets, neighbors,
-             ranks, inputs_loc, lr):
+    def body(fe_params, head_params, head_aux, opt_state, dgc_u, dgc_v,
+             inputs_loc, lr):
         def loss_fn(params, micro_inputs):
-            fe_p, w = params
+            fe_p, hp = params
             f, y, aux = _flat_features_and_labels(model_cfg, fe_p, micro_inputs)
             # hybrid parallel: gather every replica's features along the ring
             f_all = jax.lax.all_gather(f, AXIS, axis=0, tiled=True)
             y_all = jax.lax.all_gather(y, AXIS, axis=0, tiled=True)
-            gb = f_all.shape[0]
-            if use_knn:
-                loss, metrics = knn_softmax_local(
-                    f_all, y_all, w, offsets, neighbors, ranks,
-                    model_axis=AXIS, batch_axes=(), global_batch=gb,
-                    m_local=m_local, k_cap=head_cfg.knn_k, cosine_scale=16.0)
-            else:
-                loss, metrics = full_softmax_local(
-                    f_all, y_all, w, model_axis=AXIS, batch_axes=(),
-                    global_batch=gb, cosine_scale=16.0)
+            loss, metrics = head.loss_local(
+                f_all, y_all, hp, head_aux, model_axis=AXIS, batch_axes=(),
+                global_batch=f_all.shape[0])
             return loss + aux, metrics
 
         (loss, metrics), grads = microbatched_value_and_grad(
-            loss_fn, (fe_params, w_head), inputs_loc, n_micro)
-        g_fe, g_w = grads
+            loss_fn, (fe_params, head_params), inputs_loc, n_micro)
+        g_fe, g_hp = grads
 
         info = {"wire_bytes": jnp.zeros((), jnp.float32),
                 "dense_bytes": jnp.zeros((), jnp.float32)}
@@ -166,50 +182,49 @@ def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
             info["dense_bytes"] = jnp.asarray(
                 sum(leaf.size * 4 for leaf in jax.tree.leaves(g_fe)),
                 jnp.float32)
-        # fc gradient: LOCAL — never crosses devices (paper §3.1 step 6)
+        # head gradient: LOCAL — never crosses devices (paper §3.1 step 6)
 
-        updates, opt_state = opt.update((g_fe, g_w), opt_state,
-                                        (fe_params, w_head), lr)
-        fe_params, w_head = apply_updates((fe_params, w_head), updates)
+        updates, opt_state = opt.update((g_fe, g_hp), opt_state,
+                                        (fe_params, head_params), lr)
+        fe_params, head_params = apply_updates((fe_params, head_params),
+                                               updates)
         metrics = dict(metrics)
         metrics["comm_wire_bytes"] = info.get("wire_bytes", jnp.zeros((), jnp.float32))
         metrics["comm_dense_bytes"] = info["dense_bytes"]
-        return fe_params, w_head, opt_state, new_u, new_v, loss, metrics
+        return fe_params, head_params, opt_state, new_u, new_v, loss, metrics
 
     tmpl = state_template
-    specs = state_specs(tmpl)
+    specs = state_specs(tmpl, head)
     dgc_u_spec = specs.dgc.u if specs.dgc is not None else None
     dgc_v_spec = specs.dgc.v if specs.dgc is not None else None
     if tmpl.dgc is None:
         # pass small dummies with replicated spec
         dgc_u_spec = jax.tree.map(lambda _: P(), tmpl.fe_params)
         dgc_v_spec = dgc_u_spec
-    metrics_spec = dict(KNN_METRICS if use_knn else FULL_METRICS)
+    metrics_spec = dict(head.metrics_spec())
     metrics_spec["comm_wire_bytes"] = P()
     metrics_spec["comm_dense_bytes"] = P()
     input_spec = jax.tree.map(lambda _: P(AXIS), _input_structure(model_cfg))
-    graph_spec = (P(AXIS, None),) * 3
 
     shmapped = jax.shard_map(
         body, mesh=mesh,
-        in_specs=(specs.fe_params, specs.w_head, specs.opt_state,
-                  dgc_u_spec, dgc_v_spec, graph_spec[0], graph_spec[1],
-                  graph_spec[2], input_spec, P()),
-        out_specs=(specs.fe_params, specs.w_head, specs.opt_state,
+        in_specs=(specs.fe_params, specs.head_params, specs.head_aux,
+                  specs.opt_state, dgc_u_spec, dgc_v_spec, input_spec, P()),
+        out_specs=(specs.fe_params, specs.head_params, specs.opt_state,
                    dgc_u_spec, dgc_v_spec, P(), metrics_spec),
         check_vma=False,
     )
 
     @jax.jit
-    def step(state: HybridState, inputs, graph, lr):
+    def step(state: HybridState, inputs, lr):
         dgc_u = state.dgc.u if state.dgc is not None else state.fe_params
         dgc_v = state.dgc.v if state.dgc is not None else state.fe_params
-        offsets, neighbors, ranks = graph
-        fe, w, opt_state, nu_, nv_, loss, metrics = shmapped(
-            state.fe_params, state.w_head, state.opt_state, dgc_u, dgc_v,
-            offsets, neighbors, ranks, inputs, lr)
+        fe, hp, opt_state, nu_, nv_, loss, metrics = shmapped(
+            state.fe_params, state.head_params, state.head_aux,
+            state.opt_state, dgc_u, dgc_v, inputs, lr)
         dgc = sp.DGCState(u=nu_, v=nv_) if state.dgc is not None else None
-        return (HybridState(fe, w, opt_state, dgc, state.step + 1),
+        return (HybridState(fe, hp, state.head_aux, opt_state, dgc,
+                            state.step + 1),
                 loss, metrics)
 
     return step
@@ -225,56 +240,61 @@ def _input_structure(model_cfg: ModelConfig):
     return {"tokens": 0, "labels": 0}
 
 
-def dummy_graph(n_dev: int):
-    """Placeholder CompressedGraph when KNN is off (structure must be static)."""
-    return (jnp.zeros((n_dev, 2), jnp.int32),
-            jnp.zeros((n_dev, 2), jnp.int32),
-            jnp.zeros((n_dev, 2), jnp.int32))
-
-
-# ---------------------------------------------------------------------------
-# graph rebuild (paper: suspend training, rebuild on the training devices)
-# ---------------------------------------------------------------------------
-
-
-def rebuild_graph(mesh, w_head, *, k: int, kprime: int):
-    """Ring-build the exact KNN graph of the CURRENT class weights and
-    compress it per shard. Host round-trip for CSR packing (offline step)."""
-    import numpy as np
-    n_dev = mesh.shape[AXIS]
-    graph = kg.build_graph_distributed(mesh, w_head, k=k, kprime=kprime,
-                                       model_axis=AXIS)
-    cg = kg.compress_graph(np.asarray(jax.device_get(graph)), n_dev)
-    from jax.sharding import NamedSharding
-    sh = NamedSharding(mesh, P(AXIS, None))
-    return (jax.device_put(cg.offsets, sh), jax.device_put(cg.neighbors, sh),
-            jax.device_put(cg.ranks, sh))
-
-
 # ---------------------------------------------------------------------------
 # evaluation / serving
 # ---------------------------------------------------------------------------
 
 
-def make_eval_step(model_cfg: ModelConfig, mesh, state_template: HybridState):
-    """Distributed top-1 accuracy with the full softmax (deploy-style:
-    nearest class weight — paper §4.5 retrieval equivalence)."""
-    specs = state_specs(state_template)
+def _make_deploy_fn(model_cfg, mesh, state_template, head, body, structure):
+    """Shared shard_map wiring for the deploy-style eval/serve steps."""
+    specs = state_specs(state_template, head)
+    input_spec = jax.tree.map(lambda _: P(AXIS), structure)
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(specs.fe_params, specs.head_params,
+                                 specs.head_aux, input_spec),
+                       out_specs=P(), check_vma=False)
+    keys = tuple(structure)
+    return jax.jit(lambda state, inputs: fn(
+        state.fe_params, state.head_params, state.head_aux,
+        {k: inputs[k] for k in keys}))
 
-    def body(fe_params, w_head, inputs_loc):
+
+def make_eval_step(model_cfg: ModelConfig, head_cfg: HeadConfig, mesh,
+                   state_template: HybridState, *,
+                   head: Optional[SoftmaxHead] = None):
+    """Distributed top-1 accuracy with the head's own deploy-style
+    prediction (nearest class weight for W-heads — paper §4.5 retrieval
+    equivalence; hashed-bucket vote for MACH)."""
+    head = head or make_head(model_cfg, head_cfg)
+
+    def body(fe_params, head_params, head_aux, inputs_loc):
         f, y, _ = _flat_features_and_labels(model_cfg, fe_params, inputs_loc)
         f_all = jax.lax.all_gather(f, AXIS, axis=0, tiled=True)
         y_all = jax.lax.all_gather(y, AXIS, axis=0, tiled=True)
-        fn = f_all / (jnp.linalg.norm(f_all.astype(jnp.float32), axis=-1,
-                                      keepdims=True) + 1e-12).astype(f_all.dtype)
-        wn = w_head / (jnp.linalg.norm(w_head, axis=-1, keepdims=True) + 1e-12)
-        pred, _ = serve_logits_local(fn, wn, model_axis=AXIS)
-        acc = jnp.mean((pred == y_all).astype(jnp.float32))
-        return acc
+        pred, _ = head.eval_logits_local(f_all, head_params, head_aux,
+                                         model_axis=AXIS)
+        return jnp.mean((pred == y_all).astype(jnp.float32))
 
-    input_spec = jax.tree.map(lambda _: P(AXIS), _input_structure(model_cfg))
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(specs.fe_params, specs.w_head, input_spec),
-                       out_specs=P(), check_vma=False)
-    return jax.jit(lambda state, inputs: fn(state.fe_params, state.w_head,
-                                            inputs))
+    return _make_deploy_fn(model_cfg, mesh, state_template, head, body,
+                           _input_structure(model_cfg))
+
+
+def make_serve_step(model_cfg: ModelConfig, head_cfg: HeadConfig, mesh,
+                    state_template: HybridState, *,
+                    head: Optional[SoftmaxHead] = None):
+    """Deploy-style retrieval (§4.5): (state, inputs) -> [b] predicted
+    global class ids. Inputs need no "labels" key (any present is ignored);
+    pure-inference batches serve directly."""
+    head = head or make_head(model_cfg, head_cfg)
+
+    def body(fe_params, head_params, head_aux, inputs_loc):
+        f = _flat_features(model_cfg, fe_params, inputs_loc)
+        f_all = jax.lax.all_gather(f, AXIS, axis=0, tiled=True)
+        pred, _ = head.eval_logits_local(f_all, head_params, head_aux,
+                                         model_axis=AXIS)
+        return pred.astype(jnp.int32)
+
+    structure = {k: v for k, v in _input_structure(model_cfg).items()
+                 if k != "labels"}
+    return _make_deploy_fn(model_cfg, mesh, state_template, head, body,
+                           structure)

@@ -1,9 +1,14 @@
 """FCCS-driven training loop for the paper system (hybrid trainer).
 
 Orchestrates: warm-up LR, continuous batch growth via gradient accumulation
-(quantized to powers of two so at most log2(64) step variants compile), KNN
-graph rebuilds (training "suspended", as the paper does at epoch boundaries),
-periodic checkpoints and eval.
+(quantized to powers of two so at most log2(64) step variants compile), the
+head's periodic refresh (KNN graph rebuild / LSH table rebuild — training
+"suspended", as the paper does at epoch boundaries), periodic checkpoints
+and eval.
+
+The softmax head is whatever ``head_cfg.softmax_impl`` names in the
+``repro.api`` registry; the trainer never branches on the head kind — it
+only honors the head's ``refresh_every`` cadence.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ from typing import Callable, Optional
 import jax
 
 from repro import checkpoint as ckpt_lib
+from repro.api.heads import make_head
 from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
 from repro.core import fccs
 from repro.train import hybrid
@@ -34,7 +40,8 @@ class PaperTrainer:
     mesh: object
     data_fn: Callable[[int, int], dict]     # (step, global_batch) -> inputs
     hw_batch: int                           # per-update device-limited batch
-    use_knn: bool = False
+    use_knn: bool = False                   # deprecated alias for
+                                            # head_cfg.softmax_impl="knn"
     lr_fn: Optional[Callable[[int], float]] = None  # default: FCCS policy
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
@@ -43,37 +50,46 @@ class PaperTrainer:
     history: list = field(default_factory=list)
 
     def __post_init__(self):
+        if self.use_knn and self.head_cfg.softmax_impl == "full":
+            import dataclasses
+            self.head_cfg = dataclasses.replace(self.head_cfg,
+                                                softmax_impl="knn")
         n_dev = self.mesh.shape[hybrid.AXIS]
         self.n_dev = n_dev
+        self.head = make_head(self.model_cfg, self.head_cfg)
         self.state = hybrid.init_state(
             jax.random.PRNGKey(self.seed), self.model_cfg, self.head_cfg,
-            self.train_cfg, n_dev)
+            self.train_cfg, n_dev, head=self.head)
         self._steps = {}
-        self.graph = hybrid.dummy_graph(n_dev)
-        if self.use_knn:
-            self.rebuild_graph()
-        self.eval_step = hybrid.make_eval_step(self.model_cfg, self.mesh,
-                                               self.state)
+        # initial refresh: heads with derived aux state (KNN graph, LSH
+        # tables) build it from the freshly-initialized weights; a no-op
+        # for heads without periodic work.
+        self.refresh_head()
+        self.eval_step = hybrid.make_eval_step(
+            self.model_cfg, self.head_cfg, self.mesh, self.state,
+            head=self.head)
 
     def _get_step(self, n_micro: int):
         if n_micro not in self._steps:
             self._steps[n_micro] = hybrid.make_train_step(
                 self.model_cfg, self.head_cfg, self.train_cfg, self.mesh,
-                n_micro=n_micro, use_knn=self.use_knn,
-                state_template=self.state)
+                n_micro=n_micro, head=self.head, state_template=self.state)
         return self._steps[n_micro]
 
-    def rebuild_graph(self):
-        """Paper §3.2.2: suspend training, rebuild the exact graph on the
-        training devices, resume."""
+    def refresh_head(self):
+        """Paper §3.2.2: suspend training, rebuild the head's aux state on
+        the training devices, resume. Returns the wall-clock spent."""
         t0 = time.perf_counter()
-        self.graph = hybrid.rebuild_graph(
-            self.mesh, self.state.w_head, k=self.head_cfg.knn_k,
-            kprime=self.head_cfg.knn_kprime)
+        self.state = hybrid.refresh_head_state(self.head, self.mesh,
+                                               self.state)
         return time.perf_counter() - t0
+
+    # back-compat name (pre-registry API)
+    rebuild_graph = refresh_head
 
     def run(self, total_steps: int, *, use_fccs_batch: bool = True):
         fcfg = self.train_cfg.fccs
+        refresh_every = self.head.refresh_every
         with jax.set_mesh(self.mesh):
             for t in range(total_steps):
                 lr = (self.lr_fn(t) if self.lr_fn is not None
@@ -82,16 +98,15 @@ class PaperTrainer:
                      if use_fccs_batch else 1)
                 inputs = self.data_fn(t, self.hw_batch * n)
                 step = self._get_step(n)
-                self.state, loss, metrics = step(self.state, inputs,
-                                                 self.graph, lr)
-                if (self.use_knn and self.head_cfg.rebuild_every
-                        and (t + 1) % self.head_cfg.rebuild_every == 0):
-                    self.rebuild_graph()
+                self.state, loss, metrics = step(self.state, inputs, lr)
+                if refresh_every and (t + 1) % refresh_every == 0:
+                    self.refresh_head()
                 if self.ckpt_dir and self.ckpt_every and \
                         (t + 1) % self.ckpt_every == 0:
                     ckpt_lib.save(self.ckpt_dir,
                                   {"fe": self.state.fe_params,
-                                   "w": self.state.w_head}, step=t + 1)
+                                   "head": self.state.head_params},
+                                  step=t + 1)
                 row = {"step": t, "lr": lr, "batch": self.hw_batch * n,
                        "loss": float(loss),
                        "acc": float(metrics["accuracy"])}

@@ -1,0 +1,146 @@
+"""Head-strategy API: every registered softmax head trains through the
+head-agnostic hybrid trainer under identical conditions (the paper's §4.1
+comparison as a parametrized test), and the full/knn heads match their
+single-device oracles exactly."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import Experiment, HEAD_REGISTRY, make_head
+from repro.api.heads import HeadState
+from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
+from repro.core import knn_graph as kg
+from repro.core import knn_softmax as ks
+from repro.core.sharded_softmax import ce_ref
+from repro.data.synthetic import ClassificationStream, sku_feature_batch
+from repro.train import hybrid
+
+IMPLS = ["full", "knn", "selective", "mach"]
+N, D, B = 256, 32, 64
+LR = {"full": 4.0, "knn": 4.0, "selective": 4.0, "mach": 0.3}
+
+
+def _model_cfg(n=N, d=D):
+    return ModelConfig(name="feats", family="feats", n_layers=0, d_model=d,
+                       n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=n,
+                       dtype="float32")
+
+
+def _head_cfg(impl, **kw):
+    kw.setdefault("active_frac", 0.5)
+    kw.setdefault("knn_k", 8)
+    kw.setdefault("knn_kprime", 16)
+    return HeadConfig(softmax_impl=impl, **kw)
+
+
+def test_registry_covers_paper_comparison():
+    assert set(IMPLS) <= set(HEAD_REGISTRY)
+    with pytest.raises(ValueError):
+        make_head(_model_cfg(), HeadConfig(softmax_impl="bogus"))
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_every_head_trains_on_hybrid_mesh(mesh8, impl):
+    """Identical trainer, mesh, data and optimizer for all four heads: a few
+    steps must produce finite, decreasing losses and a working eval path."""
+    mcfg = _model_cfg()
+    hcfg = _head_cfg(impl)
+    tcfg = TrainConfig(optimizer="sgd", momentum=0.9)
+    stream = ClassificationStream(N, D, seed=0)
+    head = make_head(mcfg, hcfg)
+    state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg, tcfg, 8,
+                              head=head)
+    step = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh8, head=head,
+                                  state_template=state)
+    with jax.set_mesh(mesh8):
+        state = hybrid.refresh_head_state(head, mesh8, state)
+        losses = []
+        for t in range(10):
+            state, loss, m = step(state, sku_feature_batch(t, B, stream),
+                                  LR[impl])
+            losses.append(float(loss))
+        ev = hybrid.make_eval_step(mcfg, hcfg, mesh8, state, head=head)
+        acc = float(ev(state, sku_feature_batch(10**6, 2 * B, stream)))
+    assert all(jnp.isfinite(jnp.asarray(losses))), losses
+    assert losses[-1] < losses[0], losses
+    assert 0.0 <= acc <= 1.0
+    for key in head.metrics_spec():
+        assert key in m
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    key = jax.random.PRNGKey(3)
+    kf, ky = jax.random.split(key)
+    n, d, b = 64, 32, 16
+    f = jax.random.normal(kf, (b, d), jnp.float32)
+    y = jax.random.randint(ky, (b,), 0, n)
+    return n, d, f, y
+
+
+def _first_step_loss(mesh8, impl, small_problem, **hkw):
+    n, d, f, y = small_problem
+    mcfg = _model_cfg(n, d)
+    hcfg = _head_cfg(impl, **hkw)
+    tcfg = TrainConfig(optimizer="sgd", momentum=0.0)
+    head = make_head(mcfg, hcfg)
+    state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg, tcfg, 8,
+                              head=head)
+    step = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh8, head=head,
+                                  state_template=state)
+    with jax.set_mesh(mesh8):
+        state = hybrid.refresh_head_state(head, mesh8, state)
+        w0 = jax.device_get(state.head_params)
+        _, loss, _ = step(state, {"features": f, "labels": y}, 0.0)
+    return float(loss), jnp.asarray(w0)
+
+
+def test_full_head_matches_ce_ref(mesh8, small_problem):
+    """Distributed full-softmax loss == single-device oracle."""
+    n, d, f, y = small_problem
+    loss, w0 = _first_step_loss(mesh8, "full", small_problem)
+    loss_ref, _ = ce_ref(f, y, w0, cosine_scale=16.0)
+    assert abs(loss - float(loss_ref)) < 1e-4
+
+
+def test_knn_head_matches_oracle(mesh8, small_problem):
+    """With every candidate kept (m_local = V_loc, no random padding) the
+    distributed KNN-softmax loss equals the single-device oracle on the
+    exact graph."""
+    n, d, f, y = small_problem
+    loss, w0 = _first_step_loss(mesh8, "knn", small_problem,
+                                active_frac=1.0, knn_pad_random=False)
+    graph = kg.knn_graph_ref(w0, 8)
+    loss_ref = ks.knn_softmax_ref(f, y, w0, graph, m=min(f.shape[0] * 8, n),
+                                  cosine_scale=16.0)
+    assert abs(loss - float(loss_ref)) < 1e-4
+
+
+def test_refresh_is_noop_for_heads_without_periodic_work(mesh8):
+    """rebuild_every only drives heads that HAVE periodic work; for the
+    others refresh must be an identity (the launch-shim regression)."""
+    mcfg = _model_cfg()
+    for impl, has_work in (("full", False), ("knn", True),
+                           ("selective", True), ("mach", False)):
+        hcfg = _head_cfg(impl, rebuild_every=100)
+        head = make_head(mcfg, hcfg)
+        assert head.refresh_every == (100 if has_work else 0), impl
+        if not has_work:
+            hs = head.init(jax.random.PRNGKey(0), 8)
+            hs2 = head.refresh(mesh8, hs, model_axis=hybrid.AXIS)
+            assert hs2 is hs
+
+
+def test_paper_experiment_facade(mesh8):
+    """Experiment.from_config -> fit/evaluate/serve, end to end."""
+    exp = Experiment.from_config(
+        system="paper", classes=N, feat_dim=D, batch=B, mesh=mesh8,
+        head=_head_cfg("knn", rebuild_every=0), log_every=0)
+    hist = exp.fit(8, use_fccs_batch=False)
+    assert len(hist) == 8
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    acc = exp.evaluate()
+    assert 0.0 <= acc <= 1.0
+    preds = exp.serve(batch=B)
+    assert preds.shape == (B,)
+    assert preds.dtype == jnp.int32

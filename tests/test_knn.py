@@ -114,10 +114,20 @@ def test_knn_grads_touch_only_active_rows(mesh2x4, problem):
     f, w, y = problem
     g = np.asarray(kg.knn_graph_ref(w, 4))
     cg = kg.compress_graph(g, 4)
-    fn = _knn_fn(mesh2x4, f.shape[0], m_local=10, k_cap=4)
+    # loss-only shard_map: old-jax transpose chokes on the symbolic-zero
+    # cotangents of the stop-gradient'd metrics outputs
+    body = functools.partial(
+        ks.knn_softmax_local, model_axis="model", batch_axes=("data",),
+        global_batch=f.shape[0], m_local=10, k_cap=4, cosine_scale=16.0,
+        pad_random=False)
+    fn = jax.shard_map(
+        lambda *a: body(*a)[0], mesh=mesh2x4,
+        in_specs=(P("data", None), P("data"), P("model", None),
+                  P("model", None), P("model", None), P("model", None)),
+        out_specs=P())
     with jax.set_mesh(mesh2x4):
         gw = jax.jit(jax.grad(
-            lambda w_: fn(f, y, w_, cg.offsets, cg.neighbors, cg.ranks)[0]))(w)
+            lambda w_: fn(f, y, w_, cg.offsets, cg.neighbors, cg.ranks)))(w)
     rows = np.abs(np.asarray(gw)).sum(axis=1)
     n_nonzero = int((rows > 0).sum())
     # bound: m_local per (model shard x data row) = 10 * 4 * 2

@@ -1,10 +1,13 @@
 """Hypothesis property tests on system invariants (deliverable c)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import FCCSConfig, ParallelConfig
@@ -70,9 +73,8 @@ def test_select_active_invariants(n_loc, b, k, seed):
     neighbors = nbrs.reshape(-1).astype(jnp.int32)
     y = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, n_loc)
     m_local = max(b, n_loc // 2)
-    ids, valid = ks.select_active(y, offsets, neighbors, v_start=0,
-                                  v_loc=n_loc, m_local=m_local, k_cap=k,
-                                  pad_random=False)
+    ids, valid = ks.select_active(y, offsets, neighbors, v_loc=n_loc,
+                                  m_local=m_local, k_cap=k, pad_random=False)
     sel = np.asarray(ids)[np.asarray(valid)]
     assert len(set(sel.tolist())) == len(sel), "duplicate active ids"
     assert set(np.asarray(y).tolist()) <= set(sel.tolist()), "label missing"

@@ -1,13 +1,14 @@
 """End-to-end behaviour of the paper's system (hybrid-parallel trainer):
-training convergence with full/KNN softmax, DGC-on convergence, FCCS loop,
-graph rebuild cadence, eval/deploy path. These are the integration tests for
-deliverable (b)/(c)."""
+training convergence with full/KNN softmax heads, DGC-on convergence, FCCS
+loop, head refresh cadence, eval/deploy path. These are the integration
+tests for deliverable (b)/(c)."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.api.heads import make_head
 from repro.configs.base import (DGCConfig, FCCSConfig, HeadConfig,
                                 ModelConfig, TrainConfig)
 from repro.data.synthetic import ClassificationStream, lm_batch, sku_feature_batch
@@ -33,34 +34,34 @@ def stream():
     return ClassificationStream(N_CLASSES, D, seed=0)
 
 
-def _run(mesh8, stream, use_knn, steps=80, dgc=None, n_micro=1, lr=4.0,
+def _run(mesh8, stream, impl, steps=80, dgc=None, n_micro=1, lr=4.0,
          active_frac=0.3):
     mcfg = _model_cfg()
-    hcfg = HeadConfig(knn_k=16, knn_kprime=32, active_frac=active_frac)
+    hcfg = HeadConfig(softmax_impl=impl, knn_k=16, knn_kprime=32,
+                      active_frac=active_frac)
     tcfg = _train_cfg(dgc=dgc or DGCConfig(enabled=False))
-    state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg, tcfg, 8)
+    head = make_head(mcfg, hcfg)
+    state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg, tcfg, 8,
+                              head=head)
     step = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh8, n_micro=n_micro,
-                                  use_knn=use_knn, state_template=state)
-    graph = hybrid.dummy_graph(8)
+                                  head=head, state_template=state)
     with jax.set_mesh(mesh8):
-        if use_knn:
-            graph = hybrid.rebuild_graph(mesh8, state.w_head, k=16, kprime=32)
+        state = hybrid.refresh_head_state(head, mesh8, state)
         losses = []
         metrics = {}
         for t in range(steps):
             inputs = sku_feature_batch(t, B, stream)
-            state, loss, metrics = step(state, inputs, graph, lr)
+            state, loss, metrics = step(state, inputs, lr)
             losses.append(float(loss))
-            if use_knn and t == steps // 2:
-                graph = hybrid.rebuild_graph(mesh8, state.w_head, k=16,
-                                             kprime=32)
-        ev = hybrid.make_eval_step(mcfg, mesh8, state)
+            if impl == "knn" and t == steps // 2:
+                state = hybrid.refresh_head_state(head, mesh8, state)
+        ev = hybrid.make_eval_step(mcfg, hcfg, mesh8, state, head=head)
         acc = float(ev(state, sku_feature_batch(10**6, 4 * B, stream)))
     return losses, acc, metrics
 
 
 def test_full_softmax_trains(mesh8, stream):
-    losses, acc, _ = _run(mesh8, stream, use_knn=False)
+    losses, acc, _ = _run(mesh8, stream, "full")
     assert losses[-1] < 0.5 * losses[0]
     assert acc > 0.4
 
@@ -69,9 +70,8 @@ def test_knn_softmax_matches_full(mesh8, stream):
     """Paper Table 2: KNN softmax tracks full softmax accuracy. The paper's
     lossless condition is M >= |union of label neighborhoods| — at this toy
     N/B ratio that needs active_frac 0.5 (benchmarks/table2 docstring)."""
-    _, acc_full, _ = _run(mesh8, stream, use_knn=False, steps=150)
-    _, acc_knn, m = _run(mesh8, stream, use_knn=True, steps=150,
-                         active_frac=0.5)
+    _, acc_full, _ = _run(mesh8, stream, "full", steps=150)
+    _, acc_knn, m = _run(mesh8, stream, "knn", steps=150, active_frac=0.5)
     assert float(m["label_recall"]) == 1.0
     assert acc_knn > acc_full - 0.08, (acc_knn, acc_full)
 
@@ -98,8 +98,7 @@ def test_dgc_trains_without_accuracy_loss(mesh8):
         with jax.set_mesh(mesh8):
             for t in range(25):
                 state, loss, m = step(state, lm_batch(t, 16, 32,
-                                                      cfg.vocab_size),
-                                      hybrid.dummy_graph(8), 0.3)
+                                                      cfg.vocab_size), 0.3)
                 ls.append(float(loss))
         losses[name] = ls
         wire[name] = (float(m["comm_wire_bytes"]),
@@ -122,33 +121,43 @@ def test_microbatch_equals_oneshot(mesh8, stream):
                                    state_template=s1)
     step4 = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh8, n_micro=4,
                                    state_template=s2)
-    graph = hybrid.dummy_graph(8)
     inputs = sku_feature_batch(0, B, stream)
     with jax.set_mesh(mesh8):
-        s1, l1, _ = step1(s1, inputs, graph, 1.0)
-        s2, l2, _ = step4(s2, inputs, graph, 1.0)
+        s1, l1, _ = step1(s1, inputs, 1.0)
+        s2, l2, _ = step4(s2, inputs, 1.0)
     assert abs(float(l1) - float(l2)) < 1e-4
     dw = float(jnp.max(jnp.abs(s1.w_head - s2.w_head)))
     assert dw < 1e-4, dw
 
 
 def test_paper_trainer_fccs_loop(mesh8, stream):
-    """Driver: FCCS warmup + batch growth + graph rebuild, end to end."""
+    """Driver: FCCS warmup + batch growth + head refresh, end to end."""
     mcfg = _model_cfg()
-    hcfg = HeadConfig(knn_k=8, knn_kprime=16, active_frac=0.3,
-                      rebuild_every=20)
+    hcfg = HeadConfig(softmax_impl="knn", knn_k=8, knn_kprime=16,
+                      active_frac=0.3, rebuild_every=20)
     fcfg = FCCSConfig(eta0=4.0, t_warm=5, b0=B, b_min=B, b_max=4 * B,
                       t_ini=10, t_final=40)
     tcfg = TrainConfig(optimizer="sgd", fccs=fcfg)
     trainer = PaperTrainer(mcfg, hcfg, tcfg, mesh8,
                            lambda t, b: sku_feature_batch(t, b, stream),
-                           hw_batch=B, use_knn=True, log_every=0)
+                           hw_batch=B, log_every=0)
     hist = trainer.run(45)
     assert hist[-1]["batch"] == 4 * B          # cosine growth reached B_max
     assert hist[0]["batch"] == B
     assert hist[-1]["loss"] < hist[0]["loss"]
     acc = trainer.evaluate(sku_feature_batch(10**6, 2 * B, stream))
     assert acc > 0.2
+
+
+def test_use_knn_backcompat_alias(mesh8, stream):
+    """PaperTrainer(use_knn=True) still selects the knn head."""
+    mcfg = _model_cfg()
+    trainer = PaperTrainer(mcfg, HeadConfig(active_frac=0.3),
+                           TrainConfig(optimizer="sgd"), mesh8,
+                           lambda t, b: sku_feature_batch(t, b, stream),
+                           hw_batch=B, use_knn=True, log_every=0)
+    assert trainer.head_cfg.softmax_impl == "knn"
+    assert trainer.head.name == "knn"
 
 
 def test_lm_trunk_hybrid_training(mesh8):
@@ -165,6 +174,6 @@ def test_lm_trunk_hybrid_training(mesh8):
         losses = []
         for t in range(10):
             inputs = lm_batch(t, 16, 32, cfg.vocab_size)
-            state, loss, _ = step(state, inputs, hybrid.dummy_graph(8), 0.3)
+            state, loss, _ = step(state, inputs, 0.3)
             losses.append(float(loss))
     assert losses[-1] < losses[0]
