@@ -1,10 +1,12 @@
 """Paper Table 2: classification accuracy of softmax variants.
 
 Trains the same extreme-classification head under IDENTICAL conditions with
-all four registered head strategies — Full softmax, KNN softmax, Selective
-softmax (LSH), MACH — through the one head-agnostic hybrid-parallel trainer
-(this is the comparison the paper actually ran). The claims to validate:
-  KNN == Full  >  Selective  >  MACH.
+every registered head strategy — Full softmax, KNN softmax, Selective
+softmax (LSH), MACH, Sampled softmax (logQ-corrected negatives), CSoft
+count-min sketch — through the one head-agnostic hybrid-parallel trainer
+(this is the comparison the paper actually ran, extended with the two
+baselines the related work motivates). The claims to validate:
+  KNN == Full  >  Selective  >  MACH,  and sampled/csoft slot between.
 """
 from __future__ import annotations
 
@@ -16,9 +18,12 @@ from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
 from repro.data.synthetic import ClassificationStream, sku_feature_batch
 from repro.train import hybrid
 
-LR = {"full": 5.0, "knn": 5.0, "selective": 5.0, "mach": 0.5}
+IMPLS = ("full", "knn", "selective", "mach", "sampled", "csoft")
+LR = {"full": 5.0, "knn": 5.0, "selective": 5.0, "mach": 0.5,
+      "sampled": 5.0, "csoft": 0.5}
 NAMES = {"full": "full_softmax", "knn": "knn_softmax",
-         "selective": "selective_softmax", "mach": "mach"}
+         "selective": "selective_softmax", "mach": "mach",
+         "sampled": "sampled_softmax", "csoft": "csoft_countmin"}
 
 
 def run(quick: bool = False):
@@ -37,11 +42,13 @@ def run(quick: bool = False):
     tcfg = TrainConfig(optimizer="sgd", momentum=0.0)
 
     results = {}
-    for impl in ("full", "knn", "selective", "mach"):
+    for impl in IMPLS:
         hcfg = HeadConfig(softmax_impl=impl, knn_k=16, knn_kprime=32,
                           active_frac=frac,
                           rebuild_every=max(10, steps // 10),
-                          mach_b=max(64, N // 16), mach_r=4)
+                          mach_b=max(64, N // 16), mach_r=4,
+                          sampled_n=max(64, int(N * frac)),
+                          csoft_b=max(64, N // 16), csoft_r=4)
         head = make_head(mcfg, hcfg)
         state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg, tcfg,
                                   8, head=head)

@@ -5,15 +5,30 @@ softmax head (periodic exact-graph refresh), and FCCS batch growth on 8
 fake devices, then evaluates AND serves with the deploy-style
 nearest-class-weight lookup (§4.5).
 
-Swap ``softmax_impl`` for "full", "selective" or "mach" to train any other
-registered head strategy under identical conditions — no other change.
+``HeadConfig.softmax_impl`` picks the output-layer strategy — any of the
+six registered heads trains through the SAME trainer with no other change:
 
-  PYTHONPATH=src python examples/quickstart.py
+    softmax_impl="full"       exact distributed softmax (paper baseline)
+    softmax_impl="knn"        KNN softmax, the paper's contribution (§3.2)
+    softmax_impl="selective"  LSH active classes [Zhang et al., AAAI'18]
+    softmax_impl="mach"       hashed bucket softmaxes [Medini et al.'19]
+    softmax_impl="sampled"    logQ-corrected negative sampling [Jean'15]
+    softmax_impl="csoft"      count-min sketch, min-decode
+
+Swap ``system="paper"`` for ``system="zoo"`` (plus an ``arch=...``) to
+train the same heads under the GSPMD zoo trainer — the head registry is the
+single seam between the two systems (docs/architecture.md).
+
+Run me:             PYTHONPATH=src python examples/quickstart.py
+Pre-merge gate:     bash scripts/smoke.sh   (all six heads on both systems)
 """
 from repro.api import Experiment, ensure_host_devices
 from repro.configs.base import DGCConfig, FCCSConfig, HeadConfig, TrainConfig
 
 ensure_host_devices(8)
+
+# any registered head; see the table in the module docstring / docs/heads.md
+SOFTMAX_IMPL = "knn"
 
 
 def main():
@@ -24,8 +39,9 @@ def main():
         classes=n_classes,
         feat_dim=64,
         batch=batch,
-        head=HeadConfig(softmax_impl="knn", knn_k=16, knn_kprime=32,
-                        active_frac=0.1, rebuild_every=50),
+        head=HeadConfig(softmax_impl=SOFTMAX_IMPL, knn_k=16, knn_kprime=32,
+                        active_frac=0.1, rebuild_every=50,
+                        sampled_n=n_classes // 10, csoft_b=256, csoft_r=4),
         train=TrainConfig(
             optimizer="sgd",
             fccs=FCCSConfig(eta0=5.0, t_warm=15, b0=batch, b_min=batch,

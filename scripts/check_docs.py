@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Docs link check: fail on references to modules/files that don't exist.
+
+Scans the markdown docs (docs/*.md, README.md) for
+
+  * relative markdown link targets — ``[text](path)``;
+  * inline-code file references — `` `benchmarks/table2_knn_accuracy.py` ``
+    and friends (anything path-shaped ending in .py/.sh/.md);
+  * inline-code module references — `` `repro.api.heads` `` (dotted paths
+    under ``src/``; a trailing attribute segment is allowed, so
+    ``repro.api.heads.make_head`` resolves via the module prefix);
+
+and exits non-zero naming every reference that doesn't resolve, so the
+docs tree can't rot silently. Fenced code blocks are skipped (examples may
+show hypothetical files); inline code is checked. Wired into
+scripts/smoke.sh as the first pre-merge step.
+
+  python scripts/check_docs.py [file.md ...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_DOCS = sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
+
+PATH_RE = re.compile(r"^[A-Za-z0-9_][A-Za-z0-9_./-]*\.(py|sh|md)$")
+MODULE_RE = re.compile(r"^repro(\.[A-Za-z_][A-Za-z0-9_]*)+$")
+INLINE_CODE_RE = re.compile(r"`([^`\n]+)`")
+MD_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def strip_fenced_blocks(text: str) -> str:
+    """Blank out fenced code blocks, preserving line numbers."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            out.append("")
+        else:
+            out.append("" if fenced else line)
+    return "\n".join(out)
+
+
+def module_resolves(dotted: str) -> bool:
+    """``repro.a.b[.attr]`` -> src/repro/a/b.py, allowing one trailing
+    attribute segment if it textually appears in the resolved module."""
+    parts = dotted.split(".")
+    for end in range(len(parts), 1, -1):
+        base = ROOT / "src" / Path(*parts[:end])
+        mod = (base.with_suffix(".py") if base.with_suffix(".py").exists()
+               else base / "__init__.py")
+        if not mod.exists():
+            continue
+        tail = parts[end:]
+        if not tail:
+            return True
+        if len(tail) == 1 and re.search(
+                rf"\b{re.escape(tail[0])}\b", mod.read_text()):
+            return True
+        return False
+    return False
+
+
+def check_file(path: Path) -> list[str]:
+    rel = (path.relative_to(ROOT) if path.is_relative_to(ROOT) else path)
+    text = strip_fenced_blocks(path.read_text())
+    bad = []
+
+    def exists(target: str) -> bool:
+        return ((ROOT / target).exists()
+                or (path.parent / target).exists())
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in MD_LINK_RE.finditer(line):
+            target = m.group(1)
+            if "://" in target or target.startswith(("#", "mailto:")):
+                continue
+            target = target.split("#", 1)[0]
+            if target and not exists(target):
+                bad.append(f"{rel}:{lineno}: broken link target {target!r}")
+        for m in INLINE_CODE_RE.finditer(line):
+            tok = m.group(1).strip()
+            if PATH_RE.match(tok):
+                if not exists(tok):
+                    bad.append(f"{rel}:{lineno}: missing file {tok!r}")
+            elif MODULE_RE.match(tok):
+                if not module_resolves(tok):
+                    bad.append(f"{rel}:{lineno}: unresolvable module {tok!r}")
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    files = ([Path(a).resolve() for a in argv]
+             if argv else [p for p in DEFAULT_DOCS if p.exists()])
+    if not files:
+        print("check_docs: no docs found", file=sys.stderr)
+        return 1
+    failures = []
+    for path in files:
+        failures.extend(check_file(path))
+    for f in failures:
+        print(f, file=sys.stderr)
+    print(f"check_docs: {len(files)} files, {len(failures)} broken "
+          f"references")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

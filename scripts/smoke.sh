@@ -1,24 +1,34 @@
 #!/usr/bin/env bash
 # Pre-merge smoke gate: `Experiment` end-to-end for every registered softmax
-# head on the paper system, plus the reduced zoo LM (train + serve).
-# Runs in ~2 minutes on the 8-fake-device CPU container.
+# head on the paper system AND through the zoo (GSPMD) registry path, plus
+# the reduced zoo LM serve path and the docs link check.
+# Runs in a few minutes on the 8-fake-device CPU container.
 #
 #   bash scripts/smoke.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-for head in full knn selective mach; do
+echo "=== docs link check ==="
+python scripts/check_docs.py
+
+for head in full knn selective mach sampled csoft; do
   lr=2.0
-  [ "$head" = mach ] && lr=0.3   # raw-logit bucket CE wants a cooler LR
+  case "$head" in
+    mach|csoft) lr=0.3 ;;   # raw-logit bucket CE wants a cooler LR
+  esac
   echo "=== paper / $head head ==="
   python -m repro.launch.train --system paper --devices 8 --head "$head" \
       --classes 512 --steps 8 --batch 32 --lr "$lr"
 done
 
-echo "=== zoo / smollm_135m (reduced) train ==="
-python -m repro.launch.train --system zoo --devices 8 --arch smollm_135m \
-    --reduced --steps 4 --batch 16 --seq 32 --lr 0.5
+# zoo: the default full head plus the two newest registry heads (every head
+# goes through the same gspmd.make_head_train_step seam)
+for head in full sampled csoft; do
+  echo "=== zoo / smollm_135m (reduced) train / $head head ==="
+  python -m repro.launch.train --system zoo --devices 8 --arch smollm_135m \
+      --reduced --head "$head" --steps 4 --batch 16 --seq 32 --lr 0.5
+done
 
 echo "=== zoo / smollm_135m (reduced) serve ==="
 python -m repro.launch.serve --devices 8 --arch smollm_135m --reduced \

@@ -4,10 +4,12 @@ Collapses the two divergent launch paths into one façade:
 
   * ``system="paper"`` — the faithful hybrid-parallel trainer (FE data
     parallel + head model parallel on a 1-D ring) with ANY registered
-    softmax head (full / knn / selective / mach), DGC and FCCS toggles.
+    softmax head (full / knn / selective / mach / sampled / csoft), DGC
+    and FCCS toggles.
   * ``system="zoo"`` — the GSPMD trainer for any assigned architecture,
-    tensor/expert parallel on a (data, model) mesh, plus the batched
-    greedy-decoding serve path.
+    tensor/expert parallel on a (data, model) mesh, with the SAME head
+    registry driving the loss, plus the batched greedy-decoding serve
+    path.
 
 Every experiment exposes ``.fit()``, ``.evaluate()``, ``.serve()``; the
 launchers in ``repro.launch`` are thin argparse shims over this class.
@@ -147,7 +149,15 @@ class PaperExperiment(Experiment):
 
 
 class ZooExperiment(Experiment):
-    """GSPMD training/serving for any assigned architecture."""
+    """GSPMD training/serving for any assigned architecture, with ANY
+    registered softmax head: the loss is routed through the
+    ``repro.api.SoftmaxHead`` registry (``gspmd.make_head_train_step``), so
+    full / knn / selective / mach / sampled / csoft all train under the zoo
+    mesh. W-heads train the model's own class matrix (tied embedding or
+    ``params["head"]``); sketch heads (mach / csoft) thread their bucket
+    weights as head-owned trainable state. Per-head aux (KNN graph, LSH
+    tables, bucket hashes) lives in ``self.head_state.aux`` and is rebuilt
+    by ``refresh_head`` on the head's ``rebuild_every`` cadence."""
 
     def __init__(self, *, arch: str = "smollm_135m", reduced: bool = False,
                  head: Optional[HeadConfig] = None,
@@ -156,7 +166,9 @@ class ZooExperiment(Experiment):
                  ckpt_dir: Optional[str] = None, log_every: int = 10,
                  seed: int = 0):
         import jax
+        from jax.sharding import NamedSharding
 
+        from repro.api.heads import HeadState, make_head
         from repro.launch.mesh import (make_host_mesh,
                                        make_host_parallel_config)
         from repro.models import lm
@@ -171,13 +183,14 @@ class ZooExperiment(Experiment):
             cfg = dataclasses.replace(cfg, dtype="float32")
         self.model_cfg = pad_vocab(cfg, n_model)
         self.head_cfg = head or HeadConfig()
-        if self.head_cfg.softmax_impl not in ("full", "knn"):
-            # the GSPMD trainer threads only the knn graph today; failing
-            # loudly beats silently training full softmax under another name
-            raise ValueError(
-                f"zoo system supports softmax_impl 'full' or 'knn', got "
-                f"{self.head_cfg.softmax_impl!r} (selective/mach run on the "
-                f"paper system; see ROADMAP open items)")
+        if (self.head_cfg.softmax_impl == "full"
+                and self.model_cfg.family not in ("cnn", "feats")):
+            # historical zoo numerics: the full softmax on LM trunks trains
+            # RAW logits, matching the raw-argmax prefill/serve decode path;
+            # cnn/feats trunks and the other heads keep their configured
+            # cosine scale
+            self.head_cfg = dataclasses.replace(self.head_cfg,
+                                                cosine_scale=0.0)
         self.train_cfg = train or TrainConfig(optimizer="sgd")
         self.batch, self.seq = batch, seq
         self.ckpt_dir = ckpt_dir or None
@@ -187,48 +200,79 @@ class ZooExperiment(Experiment):
 
         from repro.train import gspmd
         self._gspmd = gspmd
+        self.head = make_head(self.model_cfg, self.head_cfg)
+        self._maxis, _, _ = gspmd.vocab_axes(self.par)
+        n_shards = gspmd.n_vocab_shards(self.par)
         with jax.set_mesh(self.mesh):
             params = lm.init_model(jax.random.PRNGKey(seed), self.model_cfg)
             shards = gspmd.param_shardings(self.model_cfg, self.par,
                                            self.mesh)
             self.params = jax.tree.map(jax.device_put, params, shards)
+            # head-owned state: W-heads init only aux (their class matrix
+            # IS the model's — no throwaway [V, D] draw); sketch heads keep
+            # their [R, B, D] bucket weights as trainable extras
+            def put(tree, spec):
+                return jax.tree.map(
+                    lambda a, s: jax.device_put(
+                        a, NamedSharding(self.mesh, s)), tree, spec)
+
+            hkey = jax.random.PRNGKey(seed + 1)
+            if self.head.params_are_class_weights:
+                hp = ()
+                aux = self.head.init_aux(hkey, n_shards)
+            else:
+                hs = self.head.init(hkey, n_shards)
+                hp = put(hs.params, self.head.params_spec(self._maxis))
+                aux = hs.aux
+            aux = put(aux, self.head.aux_spec(self._maxis))
+            self.head_state = HeadState(hp, aux)
         # optimizer moments / train step are built lazily on first fit()
         # so a serve-only Experiment stays at params-only cost
         self.opt_state = None
         self._train_step = None
-        self._eval_loss = None
-        self.graph = None        # knn head: sharded CompressedGraph
-        self._uses_knn = self.head_cfg.softmax_impl == "knn"
+        self._eval_step = None
+        self._refreshed = False
 
     @property
-    def _m_local(self) -> int:
-        n_model = self.mesh.shape["model"]
-        v_loc = self.model_cfg.vocab_size // n_model
-        return max(8, int(v_loc * self.head_cfg.active_frac))
+    def graph(self):
+        """Back-compat: the knn head's compressed-graph aux tuple."""
+        return self.head_state.aux if self.head.name == "knn" else None
 
-    def rebuild_graph(self):
-        """KNN head: ring-build the exact graph of the CURRENT head weights
-        on the training mesh and compress it per vocab shard (the zoo
-        counterpart of the paper trainer's head refresh)."""
+    @graph.setter
+    def graph(self, value):
+        """Back-compat: ``exp.graph = None`` forces a rebuild before the
+        next fit/evaluate; a tuple installs it as the head's aux."""
+        from repro.api.heads import HeadState
+        if value is None:
+            self._refreshed = False
+        else:
+            self.head_state = HeadState(self.head_state.params, tuple(value))
+            self._refreshed = True
+
+    def refresh_head(self):
+        """Rebuild the head's aux state (KNN graph / LSH tables) from the
+        CURRENT class weights on the training mesh — the zoo counterpart of
+        the paper trainer's head refresh. No-op for heads without periodic
+        work."""
         import jax
-        import numpy as np
-        from jax.sharding import NamedSharding
-        from jax.sharding import PartitionSpec as P
 
-        from repro.core import knn_graph as kg
+        from repro.api.heads import HeadState
         from repro.models import lm
 
-        n_model = self.mesh.shape["model"]
         with jax.set_mesh(self.mesh):
-            w = lm.head_weight(self.params, self.model_cfg)
-            graph = kg.build_graph_distributed(
-                self.mesh, w, k=self.head_cfg.knn_k,
-                kprime=self.head_cfg.knn_kprime, model_axis="model")
-            cg = kg.compress_graph(np.asarray(jax.device_get(graph)),
-                                   n_model)
-            sh = NamedSharding(self.mesh, P("model", None))
-            self.graph = tuple(jax.device_put(a, sh)
-                               for a in (cg.offsets, cg.neighbors, cg.ranks))
+            w = (lm.head_weight(self.params, self.model_cfg)
+                 if self.head.params_are_class_weights
+                 else self.head_state.params)
+            hs = self.head.refresh(self.mesh, HeadState(w, self.head_state.aux),
+                                   model_axis=self._maxis)
+            self.head_state = HeadState(self.head_state.params, hs.aux)
+        self._refreshed = True
+        return self.head_state
+
+    def rebuild_graph(self):
+        """Back-compat (pre-registry API): refresh the head and return the
+        knn graph tuple (offsets, neighbors, ranks)."""
+        self.refresh_head()
         return self.graph
 
     def _batch(self, t: int):
@@ -249,23 +293,25 @@ class ZooExperiment(Experiment):
         import jax
 
         from repro.optim import make_optimizer
-        if self._uses_knn and self.graph is None:
-            self.rebuild_graph()
+        if not self._refreshed:
+            # heads with derived aux (KNN graph, LSH tables) rebuild it from
+            # the real class weights before the first step; a no-op for the
+            # rest. Done before jit so aux shapes are final.
+            self.refresh_head()
         if self._train_step is None:
-            self.opt_state = make_optimizer(self.train_cfg).init(self.params)
-            self._train_step = jax.jit(self._gspmd.make_train_step(
+            self.opt_state = make_optimizer(self.train_cfg).init(
+                (self.params, self.head_state.params))
+            self._train_step = jax.jit(self._gspmd.make_head_train_step(
                 self.model_cfg, self.head_cfg, self.par, self.train_cfg,
-                self.mesh, self.shape))
-        refresh_every = (self.head_cfg.rebuild_every
-                         if self._uses_knn else 0)
+                self.mesh, self.shape, head=self.head))
+        refresh_every = self.head.refresh_every
         with jax.set_mesh(self.mesh):
             for t in range(steps):
-                args = ((self._batch(t), self.graph, lr) if self._uses_knn
-                        else (self._batch(t), lr))
-                self.params, self.opt_state, loss, metrics = \
-                    self._train_step(self.params, self.opt_state, *args)
+                self.params, self.head_state, self.opt_state, loss, metrics \
+                    = self._train_step(self.params, self.head_state,
+                                       self.opt_state, self._batch(t), lr)
                 if refresh_every and (t + 1) % refresh_every == 0:
-                    self.rebuild_graph()
+                    self.refresh_head()
                 row = {"step": t, "loss": float(loss),
                        "acc": float(metrics["accuracy"])}
                 self.history.append(row)
@@ -274,28 +320,31 @@ class ZooExperiment(Experiment):
                           f"acc={row['acc']:.3f}")
         if self.ckpt_dir:
             from repro import checkpoint as ckpt
-            ckpt.save(self.ckpt_dir, self.params, step=len(self.history))
+            # sketch heads train their own bucket weights — they must be
+            # part of the checkpoint or the output layer is lost
+            payload = (self.params if self.head.params_are_class_weights
+                       else {"model": self.params,
+                             "head": self.head_state.params})
+            ckpt.save(self.ckpt_dir, payload, step=len(self.history))
             print(f"[zoo] checkpoint written to {self.ckpt_dir}")
         return self.history
 
     def evaluate(self, inputs=None) -> float:
-        """Next-token accuracy on a held-out (late-stream) batch."""
+        """Deploy-style top-1 accuracy on a held-out (late-stream) batch,
+        through the head's own ``eval_logits_local`` (§4.5 retrieval for
+        W-heads, hashed-bucket decode for mach/csoft)."""
         import jax
-        if self._uses_knn and self.graph is None:
-            self.rebuild_graph()
+        if not self._refreshed:
+            self.refresh_head()
         if inputs is None:
             inputs = self._batch(10**6)
-        # the CE normalizer is baked into the loss fn: rebuild per token count
-        tokens = int(jax.numpy.size(inputs["labels"]))
-        if self._eval_loss is None or self._eval_loss[0] != tokens:
-            loss_fn = self._gspmd.make_loss_fn(
+        if self._eval_step is None:
+            self._eval_step = jax.jit(self._gspmd.make_head_eval_step(
                 self.model_cfg, self.head_cfg, self.par, self.mesh,
-                global_tokens=tokens, m_local=self._m_local)
-            self._eval_loss = (tokens, jax.jit(loss_fn))
+                head=self.head))
         with jax.set_mesh(self.mesh):
-            args = (inputs, self.graph) if self._uses_knn else (inputs,)
-            _, metrics = self._eval_loss[1](self.params, *args)
-            return float(metrics["accuracy"])
+            return float(self._eval_step(self.params, self.head_state.params,
+                                         self.head_state.aux, inputs))
 
     def serve(self, *, prompt_len: int = 32, gen: int = 16,
               batch: Optional[int] = None):
@@ -314,6 +363,15 @@ class ZooExperiment(Experiment):
             raise NotImplementedError(
                 "serve() supports decoder-only archs; whisper decoding is "
                 "exercised in tests")
+        if not self.head.params_are_class_weights:
+            # greedy decode argmaxes over the model's own [V, D] head,
+            # which the sketch heads never train — refuse loudly rather
+            # than emit tokens unrelated to the trained head
+            raise NotImplementedError(
+                f"zoo serve() decodes with the model's [V, D] head weight, "
+                f"which the {self.head.name!r} head does not train; use "
+                f"evaluate() (hashed-bucket decode) or a W-head "
+                f"(full/knn/selective/sampled) for token serving")
         gspmd = self._gspmd
         batch = batch or self.batch
         total = prompt_len + gen

@@ -3,9 +3,10 @@ API).
 
 The KDD'20 paper's core claim is a *comparison* of softmax variants — full,
 KNN softmax, selective softmax [Zhang et al., AAAI'18], MACH [Medini et al.,
-NeurIPS'19] — trained under identical hybrid-parallel conditions. This module
-makes the head a first-class strategy so any head composes with any trainer
-and any mesh:
+NeurIPS'19], plus the sampled-softmax [Jean et al., ACL'15] and CSoft
+count-min-sketch baselines — trained under identical hybrid-parallel
+conditions. This module makes the head a first-class strategy so any head
+composes with any trainer and any mesh:
 
   * ``SoftmaxHead`` — the protocol. A head owns its trainable params AND its
     auxiliary (non-trainable) state as pytrees, provides the
@@ -14,8 +15,9 @@ and any mesh:
     its metrics spec, and an optional ``refresh`` for periodic work (KNN
     graph rebuilds, LSH table rebuilds).
   * ``HEAD_REGISTRY`` / ``register_head`` / ``make_head`` — the registry
-    keyed by ``HeadConfig.softmax_impl``; new heads (sampled softmax, CSoft
-    count-min, ...) plug in without touching any trainer.
+    keyed by ``HeadConfig.softmax_impl``; new heads plug in with
+    ``@register_head`` and no trainer changes (see docs/heads.md for the
+    authoring guide).
 
 Trainers (``repro.train.hybrid`` faithfully, ``repro.train.gspmd`` for the
 zoo) call heads only through this protocol — no ``use_knn`` booleans, no
@@ -50,6 +52,12 @@ class SoftmaxHead:
     all array state lives in the ``HeadState`` they create."""
 
     name = "?"
+    # True when the head's trainable params ARE the [V, D] class-weight
+    # matrix. The zoo (GSPMD) trainer then feeds ``lm.head_weight(params)``
+    # (tied embedding or params["head"]) and trains it as part of the model;
+    # sketch heads (mach / csoft) set False and the zoo threads
+    # ``HeadState.params`` as an extra trainable pytree instead.
+    params_are_class_weights = True
 
     def __init__(self, model_cfg: ModelConfig, head_cfg: HeadConfig):
         self.model_cfg = model_cfg
@@ -64,6 +72,12 @@ class SoftmaxHead:
     def init(self, key, n_dev: int) -> HeadState:
         raise NotImplementedError
 
+    def init_aux(self, key, n_dev: int):
+        """Aux-only init, for trainers that own the class weights elsewhere
+        (the zoo's W-heads). Default falls back to a full ``init`` and
+        discards the params; heads override to avoid the throwaway draw."""
+        return self.init(key, n_dev).aux
+
     def params_spec(self, model_axis):
         """Pytree of PartitionSpecs matching ``state.params``."""
         raise NotImplementedError
@@ -74,9 +88,11 @@ class SoftmaxHead:
 
     # -- shard_map bodies -------------------------------------------------
     def loss_local(self, f_all, y_all, params, aux, *, model_axis,
-                   batch_axes, global_batch: int):
+                   batch_axes, global_batch: int, step=None):
         """Distributed CE on one device's shard. ``f_all``/``y_all`` are the
-        ring-gathered (global) batch; returns (loss, metrics)."""
+        ring-gathered (global) batch; ``step`` is the replicated training-
+        step scalar (for heads with per-step randomness; may be None).
+        Returns (loss, metrics)."""
         raise NotImplementedError
 
     def eval_logits_local(self, f_all, params, aux, *, model_axis):
@@ -137,20 +153,27 @@ class FullSoftmaxHead(SoftmaxHead):
     def init(self, key, n_dev: int) -> HeadState:
         return HeadState(params=self._init_w(key), aux=())
 
+    def init_aux(self, key, n_dev: int):
+        return ()
+
     def params_spec(self, model_axis):
         return P(model_axis, None)
 
     def loss_local(self, f_all, y_all, params, aux, *, model_axis,
-                   batch_axes, global_batch):
+                   batch_axes, global_batch, step=None):
         return full_softmax_local(
             f_all, y_all, params, model_axis=model_axis,
             batch_axes=batch_axes, global_batch=global_batch,
             cosine_scale=self.head_cfg.cosine_scale, n_valid=self.n_valid)
 
     def eval_logits_local(self, f_all, params, aux, *, model_axis):
-        fn = _normalize(f_all.astype(jnp.float32))
-        wn = _normalize(params.astype(jnp.float32))
-        return serve_logits_local(fn, wn, model_axis=model_axis,
+        f = f_all.astype(jnp.float32)
+        w = params.astype(jnp.float32)
+        if self.head_cfg.cosine_scale > 0:
+            # §4.5 retrieval equivalence holds for the normalized objective;
+            # raw-trained heads (zoo LM full softmax) decode raw argmax
+            f, w = _normalize(f), _normalize(w)
+        return serve_logits_local(f, w, model_axis=model_axis,
                                   n_valid=self.n_valid)
 
 
@@ -165,14 +188,17 @@ class KNNSoftmaxHead(FullSoftmaxHead):
     rebuilds the exact graph on the training devices (§3.2.2)."""
 
     def init(self, key, n_dev: int) -> HeadState:
-        w = self._init_w(key)
+        return HeadState(params=self._init_w(key),
+                         aux=self.init_aux(key, n_dev))
+
+    def init_aux(self, key, n_dev: int):
         # warm-start graph before the first refresh: self-only neighbor
-        # lists (lossless by construction — every label selects itself)
+        # lists (lossless by construction — every label selects itself);
+        # needs no weights
         import numpy as np
         self_graph = np.arange(self.n_classes, dtype=np.int32)[:, None]
         cg = kg.compress_graph(self_graph, n_dev)
-        return HeadState(params=w,
-                         aux=(cg.offsets, cg.neighbors, cg.ranks))
+        return (cg.offsets, cg.neighbors, cg.ranks)
 
     def aux_spec(self, model_axis):
         return (P(model_axis, None),) * 3
@@ -198,7 +224,7 @@ class KNNSoftmaxHead(FullSoftmaxHead):
         return HeadState(params=head_state.params, aux=aux)
 
     def loss_local(self, f_all, y_all, params, aux, *, model_axis,
-                   batch_axes, global_batch):
+                   batch_axes, global_batch, step=None):
         offsets, neighbors, ranks = aux
         v_loc = params.shape[0]
         m_local = max(8, int(v_loc * self.head_cfg.active_frac))
@@ -236,6 +262,13 @@ class SelectiveSoftmaxHead(FullSoftmaxHead):
         planes, offsets, classes = self._build_tables(kt, w, n_dev)
         return HeadState(params=w, aux=(planes, offsets, classes))
 
+    def init_aux(self, key, n_dev: int):
+        # shape-correct tables without a throwaway [V, D] weight draw (all
+        # classes land in bucket 0); ``refresh`` rebuilds from the real
+        # class weights before any training step uses them
+        return self._build_tables(
+            key, jnp.zeros((self.n_classes, self.d), jnp.float32), n_dev)
+
     def aux_spec(self, model_axis):
         return (P(), P(model_axis, None, None), P(model_axis, None, None))
 
@@ -255,7 +288,7 @@ class SelectiveSoftmaxHead(FullSoftmaxHead):
         return HeadState(params=head_state.params, aux=aux)
 
     def loss_local(self, f_all, y_all, params, aux, *, model_axis,
-                   batch_axes, global_batch):
+                   batch_axes, global_batch, step=None):
         planes, offsets, classes = aux
         v_loc = params.shape[0]
         m_local = max(8, int(v_loc * self.head_cfg.active_frac))
@@ -281,6 +314,8 @@ class MACHSoftmaxHead(SoftmaxHead):
     """R independent bucket heads [R, B, D] with the BUCKET axis sharded
     over the model axis; static class->bucket hash tables replicated."""
 
+    params_are_class_weights = False
+
     def _n_buckets(self, n_dev: int) -> int:
         # bucket axis must divide the ring
         b = self.head_cfg.mach_b
@@ -299,7 +334,7 @@ class MACHSoftmaxHead(SoftmaxHead):
         return (P(),)
 
     def loss_local(self, f_all, y_all, params, aux, *, model_axis,
-                   batch_axes, global_batch):
+                   batch_axes, global_batch, step=None):
         (hashes,) = aux
         return bl.mach_softmax_local(
             f_all, y_all, params, hashes, model_axis=model_axis,
@@ -309,4 +344,76 @@ class MACHSoftmaxHead(SoftmaxHead):
         (hashes,) = aux
         pred = bl.mach_predict_local(f_all, params, hashes,
                                      model_axis=model_axis)
+        return pred, None
+
+
+# ---------------------------------------------------------------------------
+# sampled softmax [Jean et al., ACL'15] — logQ-corrected negative sampling
+# ---------------------------------------------------------------------------
+
+
+@register_head("sampled")
+class SampledSoftmaxHead(FullSoftmaxHead):
+    """W [V, D] row-sharded; CE over the true label plus a drawn negative
+    set with the standard logQ correction.
+
+    ``sampled_dist="uniform"`` draws stratified per-shard negatives without
+    replacement — at ``sampled_n >= V`` the loss equals the full softmax
+    exactly, and shrinking ``sampled_n`` trades accuracy for compute.
+    ``"log_uniform"`` is the classic Zipfian LM sampler (with replacement,
+    identical draw on every class shard). Negatives are re-drawn every step
+    from (``sampled_seed``, the trainer-threaded ``step``, the batch's
+    labels); there is no aux state and no periodic work.
+
+    The train-time ``accuracy`` metric is relative to the candidate set
+    (label + drawn negatives), like knn's active-set accuracy — use the
+    deploy-style eval for full-vocabulary top-1."""
+
+    def loss_local(self, f_all, y_all, params, aux, *, model_axis,
+                   batch_axes, global_batch, step=None):
+        return bl.sampled_softmax_local(
+            f_all, y_all, params, model_axis=model_axis,
+            batch_axes=batch_axes, global_batch=global_batch,
+            n_samples=self.head_cfg.sampled_n,
+            distribution=self.head_cfg.sampled_dist,
+            seed=self.head_cfg.sampled_seed,
+            cosine_scale=self.head_cfg.cosine_scale, n_valid=self.n_valid,
+            step=step)
+
+    def metrics_spec(self) -> dict:
+        return {"accuracy": P(), "logz": P(), "sample_frac": P()}
+
+
+# ---------------------------------------------------------------------------
+# CSoft — count-min sketch over class ids (MACH lineage, min-decode)
+# ---------------------------------------------------------------------------
+
+
+@register_head("csoft")
+class CSoftSketchHead(MACHSoftmaxHead):
+    """Count-min sketch over class ids: R pairwise-independent hash rows of
+    B buckets, [R, B, D] with the BUCKET axis sharded over the model axis.
+
+    Training is the sketch's R small softmaxes (exactly MACH's loss,
+    inherited) — the two heads differ in their hash family seed and in
+    DECODING: csoft takes the min of the row log-probabilities, the
+    count-min bound, instead of MACH's mean of probabilities;
+    ``csoft_agg="mean"`` selects the geometric-mean variant."""
+
+    def _n_buckets(self, n_dev: int) -> int:
+        # bucket axis must divide the ring
+        b = self.head_cfg.csoft_b
+        return -(-b // n_dev) * n_dev
+
+    def init(self, key, n_dev: int) -> HeadState:
+        head = bl.init_mach(key, self.n_classes, self.d,
+                            n_buckets=self._n_buckets(n_dev),
+                            n_rep=self.head_cfg.csoft_r, seed=1)
+        return HeadState(params=head.w, aux=(head.hashes,))
+
+    def eval_logits_local(self, f_all, params, aux, *, model_axis):
+        (hashes,) = aux
+        pred = bl.csoft_predict_local(f_all, params, hashes,
+                                      model_axis=model_axis,
+                                      agg=self.head_cfg.csoft_agg)
         return pred, None

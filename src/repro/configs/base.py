@@ -82,11 +82,11 @@ class ModelConfig:
 class HeadConfig:
     """The paper's contribution: hybrid-parallel extreme-classification head.
 
-    ``softmax_impl`` selects a registered ``repro.api.SoftmaxHead`` strategy;
-    ``rebuild_every`` is the head's ``refresh`` cadence (graph rebuild for
-    knn, LSH-table rebuild for selective; a no-op for heads without periodic
-    work)."""
-    softmax_impl: str = "full"     # full | knn | selective | mach
+    ``softmax_impl`` selects a registered ``repro.api.SoftmaxHead`` strategy
+    (validated against the registry at construction time); ``rebuild_every``
+    is the head's ``refresh`` cadence (graph rebuild for knn, LSH-table
+    rebuild for selective; a no-op for heads without periodic work)."""
+    softmax_impl: str = "full"     # full|knn|selective|mach|sampled|csoft
     cosine_scale: float = 16.0     # normalized-logit scale (§3.2.1); 0 = raw
     # KNN softmax (paper §3.2)
     knn_k: int = 16                # neighbors per class in the graph
@@ -101,8 +101,34 @@ class HeadConfig:
     # MACH baseline
     mach_b: int = 64               # buckets
     mach_r: int = 4                # repetitions
+    # sampled softmax baseline [Jean et al.'15]
+    sampled_n: int = 2048          # negatives per step (across class shards)
+    sampled_dist: str = "uniform"  # uniform (stratified, w/o replacement)
+    #                              # | log_uniform (Zipf, with replacement)
+    sampled_seed: int = 17         # base PRNG seed for the negative sampler
+    # CSoft count-min-sketch head [Medini et al.'19 lineage]
+    csoft_b: int = 64              # buckets per hash row
+    csoft_r: int = 4               # independent hash rows
+    csoft_agg: str = "min"         # decode aggregation: min (count-min) | mean
     label_smoothing: float = 0.0
     z_loss: float = 0.0            # beyond-paper stabilizer, off by default
+
+    def __post_init__(self):
+        if self.sampled_dist not in ("uniform", "log_uniform"):
+            raise ValueError(
+                f"sampled_dist must be 'uniform' or 'log_uniform', got "
+                f"{self.sampled_dist!r}")
+        if self.csoft_agg not in ("min", "mean"):
+            raise ValueError(
+                f"csoft_agg must be 'min' or 'mean', got {self.csoft_agg!r}")
+        try:  # lazy: repro.api.heads imports this module at its own top
+            from repro.api.heads import HEAD_REGISTRY
+        except ImportError:
+            return
+        if HEAD_REGISTRY and self.softmax_impl not in HEAD_REGISTRY:
+            raise ValueError(
+                f"unknown softmax_impl {self.softmax_impl!r}; registered "
+                f"heads: {sorted(HEAD_REGISTRY)}")
 
 
 @dataclass(frozen=True)

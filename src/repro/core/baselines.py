@@ -12,8 +12,21 @@
   classes to B buckets; train R B-way softmaxes; score class j at inference
   by averaging P_r(hash_r(j)). Log-memory, but lossy (Table 2).
 
-Both are implemented as real trainable heads so the Table-2-style benchmark
-can train all four methods under identical conditions.
+* Sampled softmax [Jean et al., ACL'15] — CE over the true label plus a
+  drawn negative set with the standard logQ correction. Uniform mode draws
+  stratified per-shard negatives WITHOUT replacement, so at full sample
+  count it recovers the exact full softmax; log-uniform mode draws Zipfian
+  negatives with replacement (the classic LM sampler).
+
+* CSoft count-min sketch — R pairwise-independent hash rows of B buckets
+  (a count-min sketch over class ids). Training is identical to MACH's R
+  small softmaxes; decoding takes the MIN over the rows' log-probabilities
+  (each row over-counts a class by its bucket collisions, so the min is the
+  tightest estimate — the count-min principle), or the mean (geometric mean
+  of probabilities).
+
+All are implemented as real trainable heads so the Table-2-style benchmark
+can train every method under identical conditions.
 """
 from __future__ import annotations
 
@@ -22,8 +35,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.sharded_softmax import (_finish_ce, _flat_axis_index,
-                                        _normalize)
+from repro.core.sharded_softmax import (NEG_INF, _finish_ce,
+                                        _flat_axis_index, _normalize)
 
 # ---------------------------------------------------------------------------
 # selective softmax (LSH active classes)
@@ -146,7 +159,7 @@ def mach_predict(head: MACHHead, f):
 
 # ---------------------------------------------------------------------------
 # distributed (shard_map) counterparts — hybrid-parallel baselines so the
-# Table-2 comparison trains all four heads under identical mesh conditions
+# Table-2 comparison trains every head under identical mesh conditions
 # ---------------------------------------------------------------------------
 
 
@@ -325,4 +338,160 @@ def mach_predict_local(f_loc, w_loc, hashes, *, model_axis):
         sc = probs[r][:, idx[r]]                              # [b, N]
         scores = scores + jnp.where(local[r][None, :], sc, 0.0)
     scores = jax.lax.psum(scores, model_axis)                 # [b, N]
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# sampled softmax [Jean et al., ACL'15] — logQ-corrected negative sampling
+# ---------------------------------------------------------------------------
+
+
+def _axis_prod(axis) -> int:
+    """Static total size of one axis name or a tuple of axis names."""
+    if isinstance(axis, str):
+        return jax.lax.axis_size(axis)
+    n = 1
+    for a in axis:
+        n *= jax.lax.axis_size(a)
+    return n
+
+
+def sampled_softmax_local(
+    f_loc, y_loc, w_loc, *, model_axis, batch_axes, global_batch: int,
+    n_samples: int, distribution: str = "uniform", seed: int = 17,
+    cosine_scale: float = 16.0, n_valid: int = 0, step=None,
+):
+    """shard_map body for sampled-softmax CE, counterpart of
+    ``full_softmax_local``: the true label plus a drawn negative set, with
+    the standard logQ correction (logits minus the log expected count of
+    each candidate under the proposal distribution).
+
+    Two proposal modes (selected at trace time):
+
+    * ``"uniform"`` — each class shard draws ``n_samples / n_shards`` LOCAL
+      classes without replacement (a stratified draw over the class axis, so
+      no candidate ids ever cross devices). The inclusion probability
+      m_loc/V_loc is a constant, so the correction cancels in the softmax;
+      at ``n_samples >= V`` every class is drawn and the loss equals the
+      full softmax exactly.
+    * ``"log_uniform"`` — the classic Zipfian LM sampler: all shards draw
+      the SAME ``n_samples`` global ids with replacement (identical PRNG
+      key along the model axis), each shard scores the ids it owns, and the
+      correction uses log(n_samples * q(j)).
+
+    Sampler randomness is derived from (seed, step, labels): ``step`` is the
+    replicated training-step scalar threaded by the trainers (None falls
+    back to labels-only salting), and folding the label sum keeps negatives
+    varying across micro-batches within one step.
+    """
+    v_loc = w_loc.shape[0]
+    n_shards = _axis_prod(model_axis)
+    n_eff = n_valid or v_loc * n_shards
+    shard = _flat_axis_index(model_axis)
+    v_start = shard * v_loc
+    y_rel = (y_loc - v_start).astype(jnp.int32)
+    owned = (y_rel >= 0) & (y_rel < v_loc)
+
+    # identical salt on every model shard (y_loc is replicated along it)
+    salt = jnp.sum(y_loc.astype(jnp.uint32))
+    if step is not None:
+        salt = salt + step.astype(jnp.uint32) * jnp.uint32(2654435761)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), salt)
+
+    if distribution == "uniform":
+        m_loc = max(1, min(v_loc, n_samples // n_shards))
+        perm = jax.random.permutation(jax.random.fold_in(key, shard), v_loc)
+        ids = perm[:m_loc].astype(jnp.int32)           # local, distinct
+        samp_valid = jnp.ones((m_loc,), bool)
+        if n_valid:
+            samp_valid &= (v_start + ids) < n_valid
+        # inclusion probability of a draw without replacement
+        logq = jnp.full((m_loc,), jnp.log(m_loc / v_loc), jnp.float32)
+        logq_y = jnp.log(jnp.float32(m_loc) / v_loc)
+        sample_frac = jnp.asarray(m_loc * n_shards / n_eff, jnp.float32)
+    elif distribution == "log_uniform":
+        m = n_samples
+        u = jax.random.uniform(key, (m,), jnp.float32)  # same on all shards
+        gid = (jnp.exp(u * jnp.log(float(n_eff + 1))) - 1.0).astype(jnp.int32)
+        gid = jnp.clip(gid, 0, n_eff - 1)
+        q = jnp.log((gid + 2.0) / (gid + 1.0)) / jnp.log(float(n_eff + 1))
+        logq = jnp.log(jnp.float32(m) * q)              # log expected count
+        rel = gid - v_start
+        samp_valid = (rel >= 0) & (rel < v_loc)         # ownership mask
+        ids = jnp.clip(rel, 0, v_loc - 1)
+        qy = (jnp.log((y_loc + 2.0) / (y_loc + 1.0))
+              / jnp.log(float(n_eff + 1)))
+        logq_y = jnp.log(jnp.float32(m) * qy)
+        sample_frac = jnp.asarray(min(m, n_eff) / n_eff, jnp.float32)
+    else:
+        raise ValueError(f"unknown sampled distribution {distribution!r}")
+
+    dt = f_loc.dtype
+    f, w = ((_normalize(f_loc), _normalize(w_loc)) if cosine_scale > 0
+            else (f_loc, w_loc.astype(dt)))
+    scale = cosine_scale if cosine_scale > 0 else 1.0
+    logits_s = jnp.einsum("bd,md->bm", f, w[ids].astype(dt),
+                          preferred_element_type=jnp.float32) * scale
+    logits_s = logits_s - logq[None, :]
+    # drop invalid columns and accidental hits (a sampled id equal to the
+    # row's own label would double-count that class in Z)
+    acc_hit = (v_start + ids)[None, :] == y_loc[:, None]
+    logits_s = jnp.where(samp_valid[None, :] & ~acc_hit, logits_s, NEG_INF)
+
+    # the true label: scored by its owning shard, same correction applied
+    w_y = w[jnp.clip(y_rel, 0, v_loc - 1)]
+    logit_y = (jnp.einsum("bd,bd->b", f, w_y.astype(dt),
+                          preferred_element_type=jnp.float32) * scale
+               - logq_y)
+    logit_y = jnp.where(owned, logit_y, NEG_INF)
+
+    logits = jnp.concatenate([logits_s, logit_y[:, None]], axis=1)
+    label_col = jnp.full((f_loc.shape[0],), logits_s.shape[1], jnp.int32)
+    loss, metrics = _finish_ce(logits, label_col, owned, model_axis,
+                               tuple(batch_axes), 1.0 / global_batch)
+    metrics = dict(metrics)
+    metrics["sample_frac"] = sample_frac
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# CSoft count-min sketch decode (training reuses mach_softmax_local: the
+# sketch is trained as R small softmaxes, exactly MACH's loss)
+# ---------------------------------------------------------------------------
+
+
+def csoft_predict_local(f_loc, w_loc, hashes, *, model_axis, agg: str = "min"):
+    """Distributed count-min-sketch decode: [b] class predictions.
+
+    Per-row distributed LOG-softmax over the sharded buckets, then class j
+    is scored by aggregating log P_r(hash_r(j)) across the R hash rows:
+    ``agg="min"`` takes the count-min lower bound (every row over-counts j
+    by whatever collides into its bucket, so the min is the tightest
+    estimate); ``agg="mean"`` is the geometric mean of the row
+    probabilities. Peak memory is [b, N] per rep, not [R, b, N].
+    """
+    fl = f_loc.astype(jnp.float32)
+    logits = jnp.einsum("bd,rkd->rbk", fl, w_loc.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)  # [R, b, B_loc]
+    b_loc = logits.shape[-1]
+    m = jax.lax.pmax(jnp.max(logits, axis=-1), model_axis)    # [R, b]
+    z = jax.lax.psum(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1),
+                     model_axis)
+    logp = logits - m[..., None] - jnp.log(z)[..., None]      # local buckets
+    b_start = _flat_axis_index(model_axis) * b_loc
+    rel = hashes - b_start                                    # [R, N]
+    local = (rel >= 0) & (rel < b_loc)
+    idx = jnp.clip(rel, 0, b_loc - 1)
+    scores = None
+    for r in range(logp.shape[0]):
+        sc = logp[r][:, idx[r]]                               # [b, N]
+        sc = jax.lax.psum(jnp.where(local[r][None, :], sc, 0.0), model_axis)
+        if scores is None:
+            scores = sc
+        elif agg == "min":
+            scores = jnp.minimum(scores, sc)
+        else:
+            scores = scores + sc
+    if agg == "mean":
+        scores = scores / logp.shape[0]
     return jnp.argmax(scores, axis=-1).astype(jnp.int32)

@@ -3,7 +3,7 @@
 The paper deploys the trained 100M-class fc as a retrieval index (§4.5 —
 nearest class weight); ``Experiment.serve`` on the paper system IS that
 lookup, executed on the training mesh with whatever head is configured
-(hashed-bucket vote for MACH). On the zoo system it is standard batched
+(hashed-bucket decode for mach/csoft). On the zoo system it is standard batched
 token serving: prefill once, then greedy decode steps through the KV/SSM
 cache and the sharded-vocab argmax.
 
@@ -31,7 +31,9 @@ def main(argv=None):
     # paper
     p.add_argument("--classes", type=int, default=4096)
     p.add_argument("--feat-dim", type=int, default=64)
-    p.add_argument("--head", choices=["full", "knn", "selective", "mach"],
+    p.add_argument("--head",
+                   choices=["full", "knn", "selective", "mach", "sampled",
+                            "csoft"],
                    default="full")
     # shared
     p.add_argument("--batch", type=int, default=8)

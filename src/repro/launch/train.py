@@ -3,9 +3,11 @@
 Two systems behind one entry point:
   * ``--system paper`` — the faithful hybrid-parallel trainer (FE data
     parallel + fc model parallel on a 1-D ring) with ANY registered softmax
-    head (``--head full|knn|selective|mach``) plus DGC / FCCS toggles.
+    head (``--head full|knn|selective|mach|sampled|csoft``) plus DGC / FCCS
+    toggles.
   * ``--system zoo`` — the GSPMD trainer for any assigned architecture
-    (``--arch``), tensor/expert parallel on a (data, model) mesh.
+    (``--arch``), tensor/expert parallel on a (data, model) mesh, with the
+    same ``--head`` choices routed through the head registry.
 
 On this CPU container use --devices N to get N fake devices (the flag must
 be set before jax initializes; ``ensure_host_devices`` handles that).
@@ -30,7 +32,9 @@ def parse_args(argv=None):
     # paper system
     p.add_argument("--classes", type=int, default=4096)
     p.add_argument("--feat-dim", type=int, default=64)
-    p.add_argument("--head", choices=["full", "knn", "selective", "mach"],
+    p.add_argument("--head",
+                   choices=["full", "knn", "selective", "mach", "sampled",
+                            "csoft"],
                    default="full", help="softmax head strategy")
     p.add_argument("--knn", action="store_true",
                    help="back-compat alias for --head knn")
@@ -62,8 +66,11 @@ def main(argv=None):
     if args.system == "paper":
         # --knn is a back-compat alias; an explicit non-default --head wins
         impl = "knn" if (args.knn and args.head == "full") else args.head
+        # sampled_n below the class count so the estimator path (partial
+        # draw + logQ correction) is what actually runs, smoke included
         hcfg = HeadConfig(softmax_impl=impl, knn_k=16, knn_kprime=32,
-                          active_frac=0.1, rebuild_every=100)
+                          active_frac=0.1, rebuild_every=100,
+                          sampled_n=max(64, args.classes // 4))
         fcfg = FCCSConfig(eta0=args.lr, t_warm=max(1, args.steps // 10),
                           b0=args.batch, b_min=args.batch,
                           b_max=args.batch * 8,

@@ -4,17 +4,21 @@ The paper's trunk (ResNet-50) replicates on every device; the assigned zoo
 includes 1T-param MoEs that cannot, so the trunk here is tensor/expert-
 parallel over "model" (+ FSDP over "data" for the big configs) via logical-
 axis rules, while the *head keeps the paper's explicit hybrid-parallel
-algorithm* — a shard_map over "model" with the same pmax/psum distributed
-softmax used by the faithful trainer. Batch is sharded over ("pod","data").
+algorithm* — a shard_map over "model" whose body is ANY registered
+``repro.api.SoftmaxHead`` strategy (full / knn / selective / mach / sampled
+/ csoft), the same registry the faithful trainer uses. Batch is sharded
+over ("pod","data"); per-head aux state (KNN graph, LSH tables, bucket
+hashes) and head-owned trainable params travel as head-provided pytrees
+(``make_head_train_step``). Legacy full/knn entry points remain as shims.
 
-Provides the three step builders the dry-run lowers for every
+Provides the step builders the dry-run lowers for every
 (arch × input-shape): train_step, prefill_step, serve_step (one decode token
 through the KV/SSM cache + sharded-vocab argmax).
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import TYPE_CHECKING, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,13 +33,12 @@ from repro.configs.base import (
     TrainConfig,
     effective_vocab,
 )
-from repro.core.knn_softmax import knn_softmax_local
-from repro.core.sharded_softmax import full_softmax_local, serve_logits_local
+from repro.core.sharded_softmax import serve_logits_local
 from repro.models import lm
 from repro.optim import apply_updates, make_optimizer
 
-FULL_METRICS = {"accuracy": P(), "logz": P()}
-KNN_METRICS = {**FULL_METRICS, "active_frac": P(), "label_recall": P()}
+if TYPE_CHECKING:  # registry imported lazily inside the builders
+    from repro.api.heads import SoftmaxHead  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
@@ -153,60 +156,101 @@ def batch_pspec(par: ParallelConfig):
 
 
 # ---------------------------------------------------------------------------
-# loss assembly
+# loss assembly — routed through the repro.api head registry
 # ---------------------------------------------------------------------------
+
+
+def vocab_axes(par: ParallelConfig):
+    """(model_axis, vocab-axis tuple, residual batch axes) for the head
+    shard_map. The vocab may be sharded over one axis ("model") or several
+    (the paper's 1-D layout: every chip an fc shard — rule override
+    vocab=data,model)."""
+    vocab_ax = par.mesh_axis_for("vocab") or par.model_axis
+    vax = vocab_ax if isinstance(vocab_ax, tuple) else (vocab_ax,)
+    baxes = tuple(a for a in par.batch_axes if a not in vax)
+    return vocab_ax, vax, baxes
+
+
+def n_vocab_shards(par: ParallelConfig) -> int:
+    _, vax, _ = vocab_axes(par)
+    sizes = _mesh_sizes(par)
+    n = 1
+    for a in vax:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def make_head_loss_fn(model_cfg: ModelConfig, head_cfg: HeadConfig,
+                      par: ParallelConfig, mesh, *, global_tokens: int,
+                      head: Optional["SoftmaxHead"] = None):
+    """Zoo loss through any registered ``repro.api.SoftmaxHead``.
+
+    Returns ``loss_fn(params, head_params, head_aux, inputs, step=None)``.
+    For W-heads (``head.params_are_class_weights``) the class matrix comes
+    from the model itself (``lm.head_weight`` — tied embedding or
+    ``params["head"]``) and ``head_params`` is ignored (pass ``()``); for
+    sketch heads (mach / csoft) ``head_params`` is the head-owned trainable
+    pytree. ``head_aux`` is the head-provided aux pytree (KNN graph, LSH
+    tables, ...) placed with ``head.aux_spec``.
+    """
+    from repro.api.heads import make_head
+    head = head or make_head(model_cfg, head_cfg)
+    sharder = make_sharder(mesh, par)
+    maxis, _, baxes = vocab_axes(par)
+    param_sharder = make_layer_param_sharder(model_cfg, par, mesh)
+    hp_spec = head.params_spec(maxis)
+    aux_spec = head.aux_spec(maxis)
+    metrics_spec = dict(head.metrics_spec())
+
+    def loss_fn(params, head_params, head_aux, inputs, step=None):
+        h, aux_l, _ = lm.backbone(params, model_cfg, inputs, sharder=sharder,
+                                  remat=par.remat,
+                                  param_sharder=param_sharder)
+        f = h.reshape(-1, h.shape[-1])
+        labels = inputs["labels"].reshape(-1)
+        f = sharder(f, ("batch", "embed"))
+        hp = (lm.head_weight(params, model_cfg)
+              if head.params_are_class_weights else head_params)
+        if step is None:
+            step = jnp.zeros((), jnp.int32)
+
+        def body(f_loc, y_loc, hp_loc, aux_loc, step_no):
+            return head.loss_local(
+                f_loc, y_loc, hp_loc, aux_loc, model_axis=maxis,
+                batch_axes=baxes, global_batch=global_tokens, step=step_no)
+
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(baxes or None, None), P(baxes or None), hp_spec,
+                      aux_spec, P()),
+            out_specs=(P(), metrics_spec), check_vma=False)
+        loss, metrics = fn(f, labels, hp, head_aux, step)
+        return loss + aux_l, metrics
+
+    return loss_fn
 
 
 def make_loss_fn(model_cfg: ModelConfig, head_cfg: HeadConfig,
                  par: ParallelConfig, mesh, *, global_tokens: int,
                  use_knn: bool = False, m_local: int = 0):
-    use_knn = use_knn or head_cfg.softmax_impl == "knn"
-    sharder = make_sharder(mesh, par)
-    # vocab may be sharded over one axis ("model") or several (the paper's
-    # 1-D layout: every chip an fc shard — rule override vocab=data,model)
-    vocab_ax = par.mesh_axis_for("vocab") or par.model_axis
-    vax = vocab_ax if isinstance(vocab_ax, tuple) else (vocab_ax,)
-    maxis = vocab_ax if isinstance(vocab_ax, tuple) else vocab_ax
-    baxes = tuple(a for a in par.batch_axes if a not in vax)
-    cosine = 16.0 if (use_knn or model_cfg.family in ("cnn", "feats")) else 0.0
-    n_valid = (effective_vocab(model_cfg)
-               if model_cfg.real_vocab_size else 0)
-
-    param_sharder = make_layer_param_sharder(model_cfg, par, mesh)
+    """Back-compat full/knn zoo loss: ``loss_fn(params, inputs, graph=None)``
+    with the knn graph threaded by the caller. A thin shim over
+    ``make_head_loss_fn`` — ``use_knn`` forces the knn head and ``m_local``
+    is accepted but unused (the head derives it from ``active_frac``). The
+    historical zoo numerics are preserved: raw logits for the full softmax
+    on LM trunks, cosine logits for knn and cnn/feats trunks."""
+    import dataclasses
+    impl = "knn" if (use_knn or head_cfg.softmax_impl == "knn") else "full"
+    cosine = (16.0 if (impl == "knn" or model_cfg.family in ("cnn", "feats"))
+              else 0.0)
+    hcfg = dataclasses.replace(head_cfg, softmax_impl=impl,
+                               cosine_scale=cosine)
+    inner = make_head_loss_fn(model_cfg, hcfg, par, mesh,
+                              global_tokens=global_tokens)
 
     def loss_fn(params, inputs, graph=None):
-        h, aux, _ = lm.backbone(params, model_cfg, inputs, sharder=sharder,
-                                remat=par.remat, param_sharder=param_sharder)
-        d = h.shape[-1]
-        f = h.reshape(-1, d)
-        labels = inputs["labels"].reshape(-1)
-        f = sharder(f, ("batch", "embed"))
-        w = lm.head_weight(params, model_cfg)
-        if use_knn:
-            offsets, neighbors, ranks = graph
-            body = functools.partial(
-                knn_softmax_local, model_axis=maxis, batch_axes=baxes,
-                global_batch=global_tokens, m_local=m_local,
-                k_cap=head_cfg.knn_k, cosine_scale=16.0, n_valid=n_valid)
-            fn = jax.shard_map(
-                body, mesh=mesh,
-                in_specs=(P(baxes or None, None), P(baxes or None),
-                          P(maxis, None), P(maxis, None), P(maxis, None),
-                          P(maxis, None)),
-                out_specs=(P(), dict(KNN_METRICS)), check_vma=False)
-            loss, metrics = fn(f, labels, w, offsets, neighbors, ranks)
-        else:
-            body = functools.partial(
-                full_softmax_local, model_axis=maxis, batch_axes=baxes,
-                global_batch=global_tokens, cosine_scale=cosine,
-                n_valid=n_valid)
-            fn = jax.shard_map(
-                body, mesh=mesh,
-                in_specs=(P(baxes or None, None), P(baxes or None),
-                          P(maxis, None)),
-                out_specs=(P(), dict(FULL_METRICS)), check_vma=False)
-            loss, metrics = fn(f, labels, w)
-        return loss + aux, metrics
+        aux = tuple(graph) if graph is not None else ()
+        return inner(params, (), aux, inputs)
 
     return loss_fn
 
@@ -237,30 +281,112 @@ def auto_micro_batches(model_cfg: ModelConfig, par: ParallelConfig,
     return n
 
 
+def _step_tokens(model_cfg: ModelConfig, shape: InputShape) -> int:
+    return shape.global_batch * (1 if model_cfg.family == "cnn"
+                                 else shape.seq_len)
+
+
+def make_head_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
+                         par: ParallelConfig, train_cfg: TrainConfig, mesh,
+                         shape: InputShape, *,
+                         head: Optional["SoftmaxHead"] = None,
+                         n_micro: Optional[int] = None):
+    """Registry-routed zoo train step for ANY registered softmax head:
+
+        step(params, head_state, opt_state, inputs, lr)
+            -> (params, head_state, opt_state, loss, metrics)
+
+    ``head_state`` is a ``repro.api.HeadState``: ``params`` is the
+    head-owned trainable pytree (``()`` for W-heads, whose class matrix
+    lives in the model params) and ``aux`` the non-trainable pytree (KNN
+    graph, LSH tables, bucket hashes). The optimizer state must be built
+    over ``(params, head_state.params)``; aux is carried through unchanged
+    (rebuilds happen outside the step via ``head.refresh``).
+    """
+    from repro.api.heads import HeadState, make_head
+    from repro.core.pipeline import microbatched_value_and_grad
+
+    head = head or make_head(model_cfg, head_cfg)
+    if n_micro is None:
+        n_micro = (train_cfg.micro_batch
+                   or auto_micro_batches(model_cfg, par, shape))
+    tokens = _step_tokens(model_cfg, shape)
+    loss_fn = make_head_loss_fn(model_cfg, head_cfg, par, mesh,
+                                global_tokens=tokens // n_micro, head=head)
+    opt = make_optimizer(train_cfg)
+
+    def train_step(params, head_state, opt_state, inputs, lr):
+        step_no = opt_state.step
+        (loss, metrics), grads = microbatched_value_and_grad(
+            lambda p, x: loss_fn(p[0], p[1], head_state.aux, x, step=step_no),
+            (params, head_state.params), inputs, n_micro)
+        updates, opt_state = opt.update(grads, opt_state,
+                                        (params, head_state.params), lr)
+        params, hp = apply_updates((params, head_state.params), updates)
+        return (params, HeadState(hp, head_state.aux), opt_state, loss,
+                metrics)
+
+    return train_step
+
+
+def make_head_eval_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
+                        par: ParallelConfig, mesh, *,
+                        head: Optional["SoftmaxHead"] = None):
+    """Deploy-style distributed top-1 accuracy through the head's own
+    ``eval_logits_local`` (§4.5 retrieval for W-heads, hashed-bucket decode
+    for the sketch heads) — the zoo counterpart of
+    ``hybrid.make_eval_step``. Returns
+    ``eval_fn(params, head_params, head_aux, inputs) -> accuracy``."""
+    from repro.api.heads import make_head
+    head = head or make_head(model_cfg, head_cfg)
+    sharder = make_sharder(mesh, par)
+    maxis, _, baxes = vocab_axes(par)
+    param_sharder = make_layer_param_sharder(model_cfg, par, mesh)
+    hp_spec = head.params_spec(maxis)
+    aux_spec = head.aux_spec(maxis)
+
+    def eval_fn(params, head_params, head_aux, inputs):
+        h, _, _ = lm.backbone(params, model_cfg, inputs, sharder=sharder,
+                              remat=par.remat, param_sharder=param_sharder)
+        f = h.reshape(-1, h.shape[-1])
+        labels = inputs["labels"].reshape(-1)
+        f = sharder(f, ("batch", "embed"))
+        hp = (lm.head_weight(params, model_cfg)
+              if head.params_are_class_weights else head_params)
+
+        def body(f_loc, y_loc, hp_loc, aux_loc):
+            pred, _ = head.eval_logits_local(f_loc, hp_loc, aux_loc,
+                                             model_axis=maxis)
+            correct = jnp.mean((pred == y_loc).astype(jnp.float32))
+            return jax.lax.pmean(correct, baxes) if baxes else correct
+
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(baxes or None, None), P(baxes or None), hp_spec,
+                      aux_spec),
+            out_specs=P(), check_vma=False)
+        return fn(f, labels, hp, head_aux)
+
+    return eval_fn
+
+
 def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
                     par: ParallelConfig, train_cfg: TrainConfig, mesh,
                     shape: InputShape, *, use_knn: bool = False,
                     n_micro: Optional[int] = None):
+    """Back-compat full/knn zoo step (shim over the registry path):
+    ``step(params, opt_state, inputs[, graph], lr)`` — the knn graph is a
+    positional argument when ``use_knn`` (or the head config) selects knn.
+    New code should use ``make_head_train_step``."""
     from repro.core.pipeline import microbatched_value_and_grad
 
     use_knn = use_knn or head_cfg.softmax_impl == "knn"
     if n_micro is None:
         n_micro = (train_cfg.micro_batch
                    or auto_micro_batches(model_cfg, par, shape))
-    tokens = shape.global_batch * (1 if model_cfg.family == "cnn"
-                                   else shape.seq_len)
-    m_local = 0
-    if use_knn:
-        vocab_ax = par.mesh_axis_for("vocab") or par.model_axis
-        vax = vocab_ax if isinstance(vocab_ax, tuple) else (vocab_ax,)
-        n_model = 1
-        for a in vax:
-            n_model *= mesh.shape[a]
-        v_loc = model_cfg.vocab_size // n_model
-        m_local = max(8, int(v_loc * head_cfg.active_frac))
+    tokens = _step_tokens(model_cfg, shape)
     loss_fn = make_loss_fn(model_cfg, head_cfg, par, mesh,
-                           global_tokens=tokens // n_micro, use_knn=use_knn,
-                           m_local=m_local)
+                           global_tokens=tokens // n_micro, use_knn=use_knn)
     opt = make_optimizer(train_cfg)
 
     if use_knn:

@@ -58,7 +58,7 @@ class HybridState(NamedTuple):
     @property
     def w_head(self):
         """The [V, D] class-weight matrix, for heads whose params are one
-        array (full/knn/selective). Deploy/eval code reads this."""
+        array (full/knn/selective/sampled). Deploy/eval code reads this."""
         return self.head_params
 
 
@@ -149,7 +149,7 @@ def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
     dcfg = train_cfg.dgc
 
     def body(fe_params, head_params, head_aux, opt_state, dgc_u, dgc_v,
-             inputs_loc, lr):
+             inputs_loc, lr, step_no):
         def loss_fn(params, micro_inputs):
             fe_p, hp = params
             f, y, aux = _flat_features_and_labels(model_cfg, fe_p, micro_inputs)
@@ -158,7 +158,7 @@ def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
             y_all = jax.lax.all_gather(y, AXIS, axis=0, tiled=True)
             loss, metrics = head.loss_local(
                 f_all, y_all, hp, head_aux, model_axis=AXIS, batch_axes=(),
-                global_batch=f_all.shape[0])
+                global_batch=f_all.shape[0], step=step_no)
             return loss + aux, metrics
 
         (loss, metrics), grads = microbatched_value_and_grad(
@@ -209,7 +209,8 @@ def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
     shmapped = jax.shard_map(
         body, mesh=mesh,
         in_specs=(specs.fe_params, specs.head_params, specs.head_aux,
-                  specs.opt_state, dgc_u_spec, dgc_v_spec, input_spec, P()),
+                  specs.opt_state, dgc_u_spec, dgc_v_spec, input_spec, P(),
+                  P()),
         out_specs=(specs.fe_params, specs.head_params, specs.opt_state,
                    dgc_u_spec, dgc_v_spec, P(), metrics_spec),
         check_vma=False,
@@ -221,7 +222,7 @@ def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
         dgc_v = state.dgc.v if state.dgc is not None else state.fe_params
         fe, hp, opt_state, nu_, nv_, loss, metrics = shmapped(
             state.fe_params, state.head_params, state.head_aux,
-            state.opt_state, dgc_u, dgc_v, inputs, lr)
+            state.opt_state, dgc_u, dgc_v, inputs, lr, state.step)
         dgc = sp.DGCState(u=nu_, v=nv_) if state.dgc is not None else None
         return (HybridState(fe, hp, state.head_aux, opt_state, dgc,
                             state.step + 1),

@@ -1,0 +1,36 @@
+"""Docs can't rot silently: the link checker passes on the committed docs
+and actually fails on broken references."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CHECKER = ROOT / "scripts" / "check_docs.py"
+
+
+def _run(*args):
+    return subprocess.run([sys.executable, str(CHECKER), *args],
+                          capture_output=True, text=True)
+
+
+def test_docs_tree_exists():
+    for name in ("architecture.md", "heads.md", "paper_map.md"):
+        assert (ROOT / "docs" / name).exists(), name
+    assert (ROOT / "README.md").exists()
+
+
+def test_checked_docs_have_no_broken_references():
+    res = _run()
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_checker_catches_rot(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("see `repro.api.heads` (fine), `repro.no.such_module`, "
+                   "`scripts/does_not_exist.py` and [x](missing/file.md)\n")
+    res = _run(str(bad))
+    assert res.returncode == 1
+    assert "repro.no.such_module" in res.stderr
+    assert "scripts/does_not_exist.py" in res.stderr
+    assert "missing/file.md" in res.stderr
+    assert "repro.api.heads" not in res.stderr

@@ -15,9 +15,10 @@ from repro.core.sharded_softmax import ce_ref
 from repro.data.synthetic import ClassificationStream, sku_feature_batch
 from repro.train import hybrid
 
-IMPLS = ["full", "knn", "selective", "mach"]
+IMPLS = ["full", "knn", "selective", "mach", "sampled", "csoft"]
 N, D, B = 256, 32, 64
-LR = {"full": 4.0, "knn": 4.0, "selective": 4.0, "mach": 0.3}
+LR = {"full": 4.0, "knn": 4.0, "selective": 4.0, "mach": 0.3,
+      "sampled": 4.0, "csoft": 0.3}
 
 
 def _model_cfg(n=N, d=D):
@@ -37,6 +38,19 @@ def test_registry_covers_paper_comparison():
     assert set(IMPLS) <= set(HEAD_REGISTRY)
     with pytest.raises(ValueError):
         make_head(_model_cfg(), HeadConfig(softmax_impl="bogus"))
+
+
+def test_head_config_validation_names_registered_keys():
+    """An unknown softmax_impl fails at HeadConfig construction with an
+    error naming every registered head key."""
+    with pytest.raises(ValueError) as exc:
+        HeadConfig(softmax_impl="bogus")
+    for key in IMPLS:
+        assert key in str(exc.value)
+    with pytest.raises(ValueError):
+        HeadConfig(sampled_dist="zipfish")
+    with pytest.raises(ValueError):
+        HeadConfig(csoft_agg="max")
 
 
 @pytest.mark.parametrize("impl", IMPLS)
@@ -121,7 +135,8 @@ def test_refresh_is_noop_for_heads_without_periodic_work(mesh8):
     others refresh must be an identity (the launch-shim regression)."""
     mcfg = _model_cfg()
     for impl, has_work in (("full", False), ("knn", True),
-                           ("selective", True), ("mach", False)):
+                           ("selective", True), ("mach", False),
+                           ("sampled", False), ("csoft", False)):
         hcfg = _head_cfg(impl, rebuild_every=100)
         head = make_head(mcfg, hcfg)
         assert head.refresh_every == (100 if has_work else 0), impl
@@ -129,6 +144,155 @@ def test_refresh_is_noop_for_heads_without_periodic_work(mesh8):
             hs = head.init(jax.random.PRNGKey(0), 8)
             hs2 = head.refresh(mesh8, hs, model_axis=hybrid.AXIS)
             assert hs2 is hs
+
+
+def test_sampled_loss_approaches_full_softmax(mesh8, small_problem):
+    """The logQ-corrected sampled loss converges to the full-softmax loss
+    as the sample count approaches the class count, matching it EXACTLY at
+    full draw (uniform mode samples per-shard without replacement)."""
+    n, d, f, y = small_problem
+    diffs = []
+    for m in (n // 4, n // 2, n):
+        loss, w0 = _first_step_loss(mesh8, "sampled", small_problem,
+                                    sampled_n=m)
+        loss_ref, _ = ce_ref(f, y, jnp.asarray(w0), cosine_scale=16.0)
+        diffs.append(abs(loss - float(loss_ref)))
+    assert diffs[-1] < 1e-3, diffs
+    assert diffs[0] > diffs[1] > diffs[2], diffs
+
+
+def test_sampled_log_uniform_trains(mesh8):
+    """The Zipfian (with-replacement, shared-draw) sampler also trains:
+    finite decreasing losses and fresh negatives every step."""
+    mcfg = _model_cfg()
+    hcfg = _head_cfg("sampled", sampled_dist="log_uniform", sampled_n=128)
+    tcfg = TrainConfig(optimizer="sgd", momentum=0.9)
+    stream = ClassificationStream(N, D, seed=0)
+    head = make_head(mcfg, hcfg)
+    state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg, tcfg, 8,
+                              head=head)
+    step = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh8, head=head,
+                                  state_template=state)
+    with jax.set_mesh(mesh8):
+        losses = []
+        for t in range(8):
+            state, loss, m = step(state, sku_feature_batch(t, B, stream),
+                                  4.0)
+            losses.append(float(loss))
+    assert all(jnp.isfinite(jnp.asarray(losses))), losses
+    assert losses[-1] < losses[0], losses
+    assert 0.0 < float(m["sample_frac"]) <= 1.0
+
+
+def test_csoft_decode_roundtrips_labels(mesh8):
+    """Count-min decode: encode each class's centroid into the sketch
+    (bucket weight = superposition of the centroids hashing there), then
+    the min-aggregated distributed decode recovers the class with high
+    top-1 recovery on a small vocabulary."""
+    n, d = 64, 32
+    mcfg = _model_cfg(n, d)
+    tcfg = TrainConfig(optimizer="sgd", momentum=0.0)
+    cent = jax.random.normal(jax.random.PRNGKey(7), (n, d), jnp.float32)
+    cent = cent / jnp.linalg.norm(cent, axis=-1, keepdims=True)
+    for agg in ("min", "mean"):
+        hcfg = _head_cfg("csoft", csoft_b=32, csoft_r=4, csoft_agg=agg)
+        head = make_head(mcfg, hcfg)
+        state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg, tcfg,
+                                  8, head=head)
+        hashes = jnp.asarray(jax.device_get(state.head_aux[0]))  # [R, N]
+        w = jnp.zeros(state.head_params.shape, jnp.float32)
+        for r in range(hashes.shape[0]):
+            w = w.at[r].set(w[r].at[hashes[r]].add(cent) * 16.0)
+        state = state._replace(head_params=w)
+        ev = hybrid.make_eval_step(mcfg, hcfg, mesh8, state, head=head)
+        with jax.set_mesh(mesh8):
+            acc = float(ev(state, {"features": cent,
+                                   "labels": jnp.arange(n)}))
+        assert acc >= 0.9, (agg, acc)
+
+
+@pytest.mark.parametrize("impl", ["knn", "sampled", "csoft"])
+def test_zoo_experiment_any_registry_head(impl):
+    """ZooExperiment routes its loss through the head registry: graph-
+    carrying, W-sampling and sketch heads all train + evaluate on the
+    GSPMD mesh with no trainer changes."""
+    kw = {"knn": dict(knn_k=8, active_frac=0.5, rebuild_every=2),
+          "sampled": dict(sampled_n=256),
+          "csoft": dict(csoft_b=64, csoft_r=2)}[impl]
+    exp = Experiment.from_config(
+        system="zoo", arch="smollm_135m", reduced=True, batch=8, seq=32,
+        head=HeadConfig(softmax_impl=impl, **kw), log_every=0)
+    hist = exp.fit(3, lr=0.2)
+    assert len(hist) == 3
+    assert all(jnp.isfinite(jnp.asarray([r["loss"] for r in hist])))
+    acc = exp.evaluate()
+    assert 0.0 <= acc <= 1.0
+
+
+def test_zoo_registry_parity_with_hybrid(mesh8, mesh2x4, par2x4):
+    """Same head (mach), same FE/head init keys, same repeated batch: the
+    registry-routed zoo step and the hybrid trainer produce comparable
+    decreasing loss trajectories (different meshes, same math)."""
+    from jax.sharding import NamedSharding
+
+    from repro.configs.base import InputShape
+    from repro.data.synthetic import lm_batch
+    from repro.models import lm
+    from repro.optim import make_optimizer
+    from repro.train import gspmd
+    from tests.conftest import reduced_cfg
+
+    cfg = reduced_cfg("smollm_135m")
+    hcfg = HeadConfig(softmax_impl="mach", mach_b=64, mach_r=2)
+    tcfg = TrainConfig(optimizer="sgd", momentum=0.0)
+    inputs = lm_batch(0, 16, 32, cfg.vocab_size)
+    steps, lr = 4, 0.2
+
+    head = make_head(cfg, hcfg)
+    state = hybrid.init_state(jax.random.PRNGKey(0), cfg, hcfg, tcfg, 8,
+                              head=head)
+    step = hybrid.make_train_step(cfg, hcfg, tcfg, mesh8, head=head,
+                                  state_template=state)
+    losses_h = []
+    with jax.set_mesh(mesh8):
+        for _ in range(steps):
+            state, loss, _ = step(state, inputs, lr)
+            losses_h.append(float(loss))
+
+    # zoo side with the SAME init keys hybrid.init_state used
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    head_z = make_head(cfg, hcfg)
+    with jax.set_mesh(mesh2x4):
+        params = lm.init_model(k1, cfg)
+        params = jax.tree.map(jax.device_put, params,
+                              gspmd.param_shardings(cfg, par2x4, mesh2x4))
+        hs = head_z.init(k2, 4)   # mach_b=64 divides 8 and 4: same arrays
+
+        def put(tree, spec):
+            return jax.tree.map(
+                lambda a, s: jax.device_put(a, NamedSharding(mesh2x4, s)),
+                tree, spec)
+
+        hstate = HeadState(put(hs.params, head_z.params_spec("model")),
+                           put(hs.aux, head_z.aux_spec("model")))
+        opt_state = make_optimizer(tcfg).init((params, hstate.params))
+        zstep = jax.jit(gspmd.make_head_train_step(
+            cfg, hcfg, par2x4, tcfg, mesh2x4,
+            InputShape("t", 32, 16, "train"), head=head_z))
+        losses_z = []
+        for _ in range(steps):
+            params, hstate, opt_state, loss, _ = zstep(
+                params, hstate, opt_state, inputs, lr)
+            losses_z.append(float(loss))
+
+    assert losses_h[-1] < losses_h[0], losses_h
+    assert losses_z[-1] < losses_z[0], losses_z
+    # identical starting loss (same init, same math) ...
+    assert abs(losses_h[0] - losses_z[0]) < 1e-3, (losses_h, losses_z)
+    # ... and comparable descent after updates (hybrid's dense_exchange
+    # averages FE grads over the ring, so the paths drift slightly)
+    for a, b in zip(losses_h, losses_z):
+        assert abs(a - b) < 0.15 * losses_h[0], (losses_h, losses_z)
 
 
 def test_paper_experiment_facade(mesh8):
