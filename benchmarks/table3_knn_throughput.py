@@ -1,12 +1,16 @@
 """Paper Table 3: KNN softmax throughput vs full softmax (1.2x/1.5x/3.5x at
 1M/10M/100M classes).
 
-Two views:
+Three views:
   * measured: hybrid-trainer step wall-clock, full vs KNN head, growing N
     (CPU-scale class counts; the softmax-stage share grows with N exactly as
     in the paper, so the speedup trend is reproducible).
   * model: softmax-stage FLOPs ratio N vs (active M + graph amortization) at
     the paper's scales — the paper's own speedup mechanism.
+  * backend: per-head hybrid-trainer step wall-clock, ref (XLA) vs pallas
+    (fused kernels). NOTE: the container runs Pallas in INTERPRET mode
+    (CPU), so these numbers measure the emulation, not TPU silicon — they
+    gate correctness/regressions of the routed path, not the speedup claim.
 """
 from __future__ import annotations
 
@@ -17,6 +21,45 @@ from repro.api.heads import make_head
 from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
 from repro.data.synthetic import ClassificationStream, sku_feature_batch
 from repro.train import hybrid
+
+ALL_HEADS = ("full", "knn", "selective", "mach", "sampled", "csoft")
+
+
+def run_backends(quick: bool = False, heads=ALL_HEADS):
+    """Ref-vs-pallas (interpret mode) step wall-clock per registry head."""
+    N, D, B = (1024, 64, 64) if quick else (4096, 64, 128)
+    mesh = hybrid.make_hybrid_mesh(8)
+    tcfg = TrainConfig(optimizer="sgd")
+    stream = ClassificationStream(N, D, seed=0)
+    mcfg = ModelConfig(name="t3b", family="feats", n_layers=0, d_model=D,
+                       n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=N,
+                       dtype="float32")
+    inputs = sku_feature_batch(0, B, stream)
+    results = {}
+    with jax.set_mesh(mesh):
+        for name in heads:
+            times = {}
+            for backend in ("ref", "pallas"):
+                hcfg = HeadConfig(softmax_impl=name, backend=backend,
+                                  knn_k=16, knn_kprime=32, active_frac=0.1,
+                                  sampled_n=max(64, N // 4))
+                head = make_head(mcfg, hcfg)
+                state = hybrid.init_state(jax.random.PRNGKey(0), mcfg, hcfg,
+                                          tcfg, 8, head=head)
+                state = hybrid.refresh_head_state(head, mesh, state)
+                step = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh,
+                                              head=head,
+                                              state_template=state)
+                t = timeit(lambda: step(state, inputs, 1.0),
+                           n=3 if quick else 10)
+                times[backend] = t
+                row(f"table3/backend_{name}_{backend}", t * 1e6,
+                    f"images_per_s={B / t:.0f}")
+            results[name] = times
+            row(f"table3/backend_{name}_ratio", 0.0,
+                f"pallas_vs_ref={times['ref'] / times['pallas']:.2f}x "
+                f"(interpret mode)")
+    return results
 
 
 def run(quick: bool = False):
@@ -65,6 +108,7 @@ def run(quick: bool = False):
     ks = sorted(speedups)
     row("table3/claim_speedup_grows_with_N", 0.0,
         f"holds={speedups[ks[-1]] >= speedups[ks[0]]}")
+    run_backends(quick=quick, heads=("full", "knn") if quick else ALL_HEADS)
     return speedups
 
 

@@ -22,6 +22,19 @@ for head in full knn selective mach sampled csoft; do
       --classes 512 --steps 8 --batch 32 --lr "$lr"
 done
 
+# pallas-backend leg: the fused-kernel hot path (interpret mode on CPU) must
+# train and serve the same heads the ref backend does — backend parity is
+# gated pre-merge (full = fused streaming CE, knn = sparse CE + dist_topk
+# graph build, topk = d&c top-k serving)
+for head in full knn; do
+  echo "=== paper / $head head / pallas backend ==="
+  python -m repro.launch.train --system paper --devices 8 --head "$head" \
+      --backend pallas --classes 512 --steps 4 --batch 32 --lr 2.0
+done
+echo "=== paper / top-5 serve / pallas backend ==="
+python -m repro.launch.serve --devices 8 --system paper --classes 512 \
+    --head full --batch 16 --topk 5 --backend pallas
+
 # zoo: the default full head plus the two newest registry heads (every head
 # goes through the same gspmd.make_head_train_step seam)
 for head in full sampled csoft; do

@@ -99,6 +99,7 @@ class PaperExperiment(Experiment):
             ckpt_dir=ckpt_dir or None, ckpt_every=ckpt_every,
             log_every=log_every, seed=seed)
         self._serve_step = None
+        self._topk_steps: dict = {}
 
     def _default_data_fn(self):
         from repro.data.synthetic import (ClassificationStream,
@@ -126,15 +127,31 @@ class PaperExperiment(Experiment):
             inputs = self.data_fn(10**6, eval_batch or 4 * self.batch)
         return self.trainer.evaluate(inputs)
 
-    def serve(self, inputs=None, *, batch: Optional[int] = None):
+    def serve(self, inputs=None, *, batch: Optional[int] = None,
+              top_k: Optional[int] = None, return_scores: bool = False):
         """Deploy-style retrieval (§4.5): nearest-class (or hashed-vote)
-        predictions for a batch of inputs. Returns [b] class ids."""
+        predictions for a batch of inputs.
+
+        Greedy mode (default) returns [b] class ids. ``top_k=k`` switches to
+        k-best retrieval with scores — each shard's local top-k (ref:
+        ``lax.top_k``; pallas: the divide-and-conquer ``ops.topk_rows``
+        kernel) merged over the ring — returning ids [b, k] (descending), or
+        (ids, scores) when ``return_scores`` is set."""
         import jax
 
         from repro.train import hybrid
 
         if inputs is None:
             inputs = self.data_fn(10**6, batch or self.batch)
+        if top_k is not None:
+            if top_k not in self._topk_steps:
+                self._topk_steps[top_k] = hybrid.make_topk_serve_step(
+                    self.model_cfg, self.head_cfg, self.mesh, self.state,
+                    top_k, head=self.trainer.head)
+            with jax.set_mesh(self.mesh):
+                vals, ids = jax.device_get(
+                    self._topk_steps[top_k](self.state, inputs))
+            return (ids, vals) if return_scores else ids
         if self._serve_step is None:
             self._serve_step = hybrid.make_serve_step(
                 self.model_cfg, self.head_cfg, self.mesh, self.state,

@@ -22,6 +22,13 @@ composes with any trainer and any mesh:
 Trainers (``repro.train.hybrid`` faithfully, ``repro.train.gspmd`` for the
 zoo) call heads only through this protocol — no ``use_knn`` booleans, no
 head-specific branches.
+
+Every head additionally honors ``HeadConfig.backend`` ("ref" | "pallas"):
+the strategy threads the choice down into its distributed body, which runs
+the softmax-stage hotspot either as plain XLA or through the fused Pallas
+kernels (streaming CE for the dense heads, active-class sparse CE for the
+selection heads) — see docs/kernels.md. Trainers stay untouched: the
+backend is a head concern, selected per-config like the head itself.
 """
 from __future__ import annotations
 
@@ -37,6 +44,7 @@ from repro.core import baselines as bl
 from repro.core import knn_graph as kg
 from repro.core.knn_softmax import knn_softmax_local
 from repro.core.sharded_softmax import (_normalize, full_softmax_local,
+                                        serve_argmax_local,
                                         serve_logits_local)
 
 
@@ -67,6 +75,11 @@ class SoftmaxHead:
         # padded-vocab masking (Megatron-style): labels < n_valid always
         self.n_valid = (effective_vocab(model_cfg)
                         if model_cfg.real_vocab_size else 0)
+        # compute backend for the hot bodies: "ref" (XLA) | "pallas" (fused
+        # kernels); the VMEM blocking knobs ride along
+        self.backend = head_cfg.backend
+        self.block_v = head_cfg.pallas_block_v
+        self.block_a = head_cfg.pallas_block_a
 
     # -- state ------------------------------------------------------------
     def init(self, key, n_dev: int) -> HeadState:
@@ -164,7 +177,8 @@ class FullSoftmaxHead(SoftmaxHead):
         return full_softmax_local(
             f_all, y_all, params, model_axis=model_axis,
             batch_axes=batch_axes, global_batch=global_batch,
-            cosine_scale=self.head_cfg.cosine_scale, n_valid=self.n_valid)
+            cosine_scale=self.head_cfg.cosine_scale, n_valid=self.n_valid,
+            backend=self.backend, block_v=self.block_v)
 
     def eval_logits_local(self, f_all, params, aux, *, model_axis):
         f = f_all.astype(jnp.float32)
@@ -173,6 +187,11 @@ class FullSoftmaxHead(SoftmaxHead):
             # §4.5 retrieval equivalence holds for the normalized objective;
             # raw-trained heads (zoo LM full softmax) decode raw argmax
             f, w = _normalize(f), _normalize(w)
+        if self.backend == "pallas":
+            # streaming (max, argmax) stats — no [b, V_loc] logits in HBM
+            return serve_argmax_local(f, w, model_axis=model_axis,
+                                      n_valid=self.n_valid,
+                                      block_v=self.block_v)
         return serve_logits_local(f, w, model_axis=model_axis,
                                   n_valid=self.n_valid)
 
@@ -216,7 +235,8 @@ class KNNSoftmaxHead(FullSoftmaxHead):
         n_dev = mesh.shape[model_axis]
         graph = kg.build_graph_distributed(
             mesh, head_state.params, k=self.head_cfg.knn_k,
-            kprime=self.head_cfg.knn_kprime, model_axis=model_axis)
+            kprime=self.head_cfg.knn_kprime, model_axis=model_axis,
+            backend=self.backend)
         cg = kg.compress_graph(np.asarray(jax.device_get(graph)), n_dev)
         sh = NamedSharding(mesh, P(model_axis, None))
         aux = tuple(jax.device_put(a, sh)
@@ -234,7 +254,8 @@ class KNNSoftmaxHead(FullSoftmaxHead):
             global_batch=global_batch, m_local=m_local,
             k_cap=self.head_cfg.knn_k,
             cosine_scale=self.head_cfg.cosine_scale,
-            pad_random=self.head_cfg.knn_pad_random, n_valid=self.n_valid)
+            pad_random=self.head_cfg.knn_pad_random, n_valid=self.n_valid,
+            backend=self.backend, block_a=self.block_a)
 
     def metrics_spec(self) -> dict:
         return {"accuracy": P(), "logz": P(), "active_frac": P(),
@@ -297,7 +318,8 @@ class SelectiveSoftmaxHead(FullSoftmaxHead):
             model_axis=model_axis, batch_axes=batch_axes,
             global_batch=global_batch, m_local=m_local,
             cap=self.head_cfg.selective_cap,
-            cosine_scale=self.head_cfg.cosine_scale)
+            cosine_scale=self.head_cfg.cosine_scale,
+            backend=self.backend, block_a=self.block_a)
 
     def metrics_spec(self) -> dict:
         return {"accuracy": P(), "logz": P(), "active_frac": P(),
@@ -338,7 +360,8 @@ class MACHSoftmaxHead(SoftmaxHead):
         (hashes,) = aux
         return bl.mach_softmax_local(
             f_all, y_all, params, hashes, model_axis=model_axis,
-            batch_axes=batch_axes, global_batch=global_batch)
+            batch_axes=batch_axes, global_batch=global_batch,
+            backend=self.backend, block_v=self.block_v)
 
     def eval_logits_local(self, f_all, params, aux, *, model_axis):
         (hashes,) = aux
@@ -378,7 +401,7 @@ class SampledSoftmaxHead(FullSoftmaxHead):
             distribution=self.head_cfg.sampled_dist,
             seed=self.head_cfg.sampled_seed,
             cosine_scale=self.head_cfg.cosine_scale, n_valid=self.n_valid,
-            step=step)
+            step=step, backend=self.backend, block_a=self.block_a)
 
     def metrics_spec(self) -> dict:
         return {"accuracy": P(), "logz": P(), "sample_frac": P()}

@@ -85,8 +85,19 @@ class HeadConfig:
     ``softmax_impl`` selects a registered ``repro.api.SoftmaxHead`` strategy
     (validated against the registry at construction time); ``rebuild_every``
     is the head's ``refresh`` cadence (graph rebuild for knn, LSH-table
-    rebuild for selective; a no-op for heads without periodic work)."""
+    rebuild for selective; a no-op for heads without periodic work).
+
+    ``backend`` selects the compute backend for the head's hot path
+    (``loss_local`` / ``eval_logits_local``): ``"ref"`` is the plain-XLA
+    reference implementation; ``"pallas"`` streams the softmax stage through
+    the fused Pallas kernels (``repro.kernels``) so the dense ``[B, V_local]``
+    logit tensor never reaches HBM — the paper's §3.2 hotspot. Both backends
+    compute the same loss and gradients to fp32 tolerance (see
+    tests/test_backend_parity.py and docs/kernels.md)."""
     softmax_impl: str = "full"     # full|knn|selective|mach|sampled|csoft
+    backend: str = "ref"           # ref (XLA) | pallas (fused kernels)
+    pallas_block_v: int = 512      # fused-CE vocab tile rows (VMEM blocking)
+    pallas_block_a: int = 128      # sparse-CE active-set tile (VMEM blocking)
     cosine_scale: float = 16.0     # normalized-logit scale (§3.2.1); 0 = raw
     # KNN softmax (paper §3.2)
     knn_k: int = 16                # neighbors per class in the graph
@@ -114,6 +125,9 @@ class HeadConfig:
     z_loss: float = 0.0            # beyond-paper stabilizer, off by default
 
     def __post_init__(self):
+        if self.backend not in ("ref", "pallas"):
+            raise ValueError(
+                f"backend must be 'ref' or 'pallas', got {self.backend!r}")
         if self.sampled_dist not in ("uniform", "log_uniform"):
             raise ValueError(
                 f"sampled_dist must be 'uniform' or 'log_uniform', got "
@@ -203,6 +217,14 @@ class DGCConfig:
     factor_masking: bool = True
     chunk: int = 2048              # divide-and-conquer chunk size
     group_bytes: int = 1 << 22     # tensor-grouping target bucket size
+    backend: str = "ref"           # threshold selection: ref (jnp sort path)
+    #                              # | pallas (kernels.ops.topk_threshold)
+
+    def __post_init__(self):
+        if self.backend not in ("ref", "pallas"):
+            raise ValueError(
+                f"DGC backend must be 'ref' or 'pallas', got "
+                f"{self.backend!r}")
 
 
 @dataclass(frozen=True)

@@ -35,8 +35,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.core.sharded_softmax import (NEG_INF, _finish_ce,
-                                        _flat_axis_index, _normalize)
+                                        _finish_ce_stats, _flat_axis_index,
+                                        _normalize)
 
 # ---------------------------------------------------------------------------
 # selective softmax (LSH active classes)
@@ -205,7 +207,7 @@ def build_sharded_lsh_tables(key, w, n_shards: int, n_tables: int,
 def selective_softmax_local(
     f_loc, y_loc, w_loc, planes, offsets_loc, classes_loc, *,
     model_axis, batch_axes, global_batch: int, m_local: int, cap: int,
-    cosine_scale: float = 16.0,
+    cosine_scale: float = 16.0, backend: str = "ref", block_a: int = 128,
 ):
     """shard_map body for the selective-softmax loss (HF-A flavored),
     counterpart of ``full_softmax_local``.
@@ -261,18 +263,34 @@ def selective_softmax_local(
         mask = jnp.concatenate([mask, jnp.zeros((pad,), bool)])
     ids = jnp.where(mask, ids, 0).astype(jnp.int32)
 
-    dt = f_loc.dtype
-    f = _normalize(f_loc)
-    w_act = _normalize(w_loc[ids])
-    logits = jnp.einsum("bd,md->bm", f, w_act.astype(dt),
-                        preferred_element_type=jnp.float32) * cosine_scale
-    logits = jnp.where(mask[None, :], logits, -1e30)
-
     hit = (ids[None, :] == y_rel[:, None]) & mask[None, :]
-    lpos = jnp.argmax(hit, axis=1).astype(jnp.int32)
     owned = owned_label & jnp.any(hit, axis=1)
-    loss, metrics = _finish_ce(logits, lpos, owned, model_axis,
-                               tuple(batch_axes), 1.0 / global_batch)
+
+    if backend == "pallas":
+        # fused active-class sparse CE: gather + online softmax in one
+        # streamed sweep — the dense [b, m_local] logit tensor never forms
+        f = _normalize(f_loc).astype(jnp.float32)
+        wn = _normalize(w_loc).astype(jnp.float32)
+        gids = v_start + ids
+        bias = jnp.zeros((ids.shape[0],), jnp.float32)
+        m, z, corr, amax = ops.sparse_ce_stats(
+            f, wn, ids, gids, bias, mask.astype(jnp.int32), y_loc,
+            cosine_scale, block_a, False)
+        corr = jnp.where(owned, corr, 0.0)
+        pred_gid = jnp.where(amax >= 0, gids[jnp.maximum(amax, 0)], -1)
+        loss, metrics = _finish_ce_stats(m, z, corr, pred_gid, y_loc, owned,
+                                         model_axis, tuple(batch_axes),
+                                         1.0 / global_batch)
+    else:
+        dt = f_loc.dtype
+        f = _normalize(f_loc)
+        w_act = _normalize(w_loc[ids])
+        logits = jnp.einsum("bd,md->bm", f, w_act.astype(dt),
+                            preferred_element_type=jnp.float32) * cosine_scale
+        logits = jnp.where(mask[None, :], logits, -1e30)
+        lpos = jnp.argmax(hit, axis=1).astype(jnp.int32)
+        loss, metrics = _finish_ce(logits, lpos, owned, model_axis,
+                                   tuple(batch_axes), 1.0 / global_batch)
     max_t = model_axis if isinstance(model_axis, tuple) else (model_axis,)
     metrics["active_frac"] = jax.lax.pmean(
         jnp.mean(mask.astype(jnp.float32)), max_t + tuple(batch_axes))
@@ -283,28 +301,48 @@ def selective_softmax_local(
 
 
 def mach_softmax_local(f_loc, y_loc, w_loc, hashes, *, model_axis,
-                       batch_axes, global_batch: int):
+                       batch_axes, global_batch: int, backend: str = "ref",
+                       block_v: int = 512):
     """shard_map body for the MACH loss: R independent B-way softmaxes with
     the BUCKET axis sharded over the model axis (log-memory per device).
 
     w_loc [R, B_loc, D] local bucket shards; hashes [R, N] replicated. Each
     rep's CE is completed distributedly by folding the rep axis into the
     batch of the shared CE tail; the returned loss matches ``mach_loss``
-    (mean over samples of the sum of R bucket CEs).
+    (mean over samples of the sum of R bucket CEs). ``backend="pallas"``
+    streams each rep's bucket scoring through the fused-CE kernel instead
+    of the dense [R, b, B_loc] einsum.
     """
     fl = f_loc.astype(jnp.float32)
-    logits = jnp.einsum("bd,rkd->rbk", fl, w_loc.astype(jnp.float32),
-                        preferred_element_type=jnp.float32)  # [R, b, B_loc]
-    n_rep, b, b_loc = logits.shape
+    n_rep, b_loc = w_loc.shape[0], w_loc.shape[1]
+    b = f_loc.shape[0]
     b_start = _flat_axis_index(model_axis) * b_loc
     ybuck = hashes[:, y_loc]                                  # [R, b] global
     rel = (ybuck - b_start).astype(jnp.int32)
     owned = (rel >= 0) & (rel < b_loc)
-    loss, metrics = _finish_ce(
-        logits.reshape(n_rep * b, b_loc),
-        jnp.clip(rel, 0, b_loc - 1).reshape(n_rep * b),
-        owned.reshape(n_rep * b), model_axis, tuple(batch_axes),
-        1.0 / global_batch)
+
+    if backend == "pallas":
+        limit = jnp.asarray(b_loc, jnp.int32)
+        stats = [ops.ce_shard_stats(
+                     fl, w_loc[r].astype(jnp.float32),
+                     jnp.where(owned[r], rel[r], -1), limit, 1.0,
+                     min(block_v, max(8, b_loc)))
+                 for r in range(n_rep)]                       # R small
+        m, z, corr, amax = (jnp.concatenate([s[i] for s in stats])
+                            for i in range(4))
+        pred_gid = jnp.where(amax >= 0, b_start + amax, -1)
+        loss, metrics = _finish_ce_stats(
+            m, z, corr, pred_gid, ybuck.reshape(n_rep * b),
+            owned.reshape(n_rep * b), model_axis, tuple(batch_axes),
+            1.0 / global_batch)
+    else:
+        logits = jnp.einsum("bd,rkd->rbk", fl, w_loc.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)  # [R,b,B_loc]
+        loss, metrics = _finish_ce(
+            logits.reshape(n_rep * b, b_loc),
+            jnp.clip(rel, 0, b_loc - 1).reshape(n_rep * b),
+            owned.reshape(n_rep * b), model_axis, tuple(batch_axes),
+            1.0 / global_batch)
     metrics = dict(metrics)
     # CE-tail accuracy counted one hit per (rep, sample): report the
     # per-rep mean bucket accuracy
@@ -360,6 +398,7 @@ def sampled_softmax_local(
     f_loc, y_loc, w_loc, *, model_axis, batch_axes, global_batch: int,
     n_samples: int, distribution: str = "uniform", seed: int = 17,
     cosine_scale: float = 16.0, n_valid: int = 0, step=None,
+    backend: str = "ref", block_a: int = 128,
 ):
     """shard_map body for sampled-softmax CE, counterpart of
     ``full_softmax_local``: the true label plus a drawn negative set, with
@@ -430,13 +469,6 @@ def sampled_softmax_local(
     f, w = ((_normalize(f_loc), _normalize(w_loc)) if cosine_scale > 0
             else (f_loc, w_loc.astype(dt)))
     scale = cosine_scale if cosine_scale > 0 else 1.0
-    logits_s = jnp.einsum("bd,md->bm", f, w[ids].astype(dt),
-                          preferred_element_type=jnp.float32) * scale
-    logits_s = logits_s - logq[None, :]
-    # drop invalid columns and accidental hits (a sampled id equal to the
-    # row's own label would double-count that class in Z)
-    acc_hit = (v_start + ids)[None, :] == y_loc[:, None]
-    logits_s = jnp.where(samp_valid[None, :] & ~acc_hit, logits_s, NEG_INF)
 
     # the true label: scored by its owning shard, same correction applied
     w_y = w[jnp.clip(y_rel, 0, v_loc - 1)]
@@ -445,10 +477,44 @@ def sampled_softmax_local(
                - logq_y)
     logit_y = jnp.where(owned, logit_y, NEG_INF)
 
-    logits = jnp.concatenate([logits_s, logit_y[:, None]], axis=1)
-    label_col = jnp.full((f_loc.shape[0],), logits_s.shape[1], jnp.int32)
-    loss, metrics = _finish_ce(logits, label_col, owned, model_axis,
-                               tuple(batch_axes), 1.0 / global_batch)
+    if backend == "pallas":
+        # fused candidate-set CE with the logQ correction as a per-column
+        # bias; accidental hits (a sampled id equal to the row's own label)
+        # are masked IN-KERNEL (mask_hits) so z never double-counts a class.
+        # The [b, m] candidate logit tensor never forms; the label column is
+        # folded into the per-row online stats below.
+        gids = v_start + ids
+        m_s, z_s, _, amax_s = ops.sparse_ce_stats(
+            f.astype(jnp.float32), w.astype(jnp.float32), ids, gids,
+            -logq, samp_valid.astype(jnp.int32), y_loc, scale, block_a,
+            True)
+        m_row = jax.lax.stop_gradient(jnp.maximum(m_s, logit_y))
+        z_resc = jnp.where(jnp.isfinite(m_s), jnp.exp(
+            jax.lax.stop_gradient(m_s) - m_row), 0.0)
+        z_row = (z_s * z_resc
+                 + jnp.where(owned, jnp.exp(logit_y - m_row), 0.0))
+        corr_row = jnp.where(owned, logit_y, 0.0)
+        best_is_label = owned & (logit_y >= m_s)
+        pred_gid = jnp.where(
+            best_is_label, y_loc,
+            jnp.where(amax_s >= 0, gids[jnp.maximum(amax_s, 0)], -1))
+        loss, metrics = _finish_ce_stats(m_row, z_row, corr_row, pred_gid,
+                                         y_loc, owned, model_axis,
+                                         tuple(batch_axes),
+                                         1.0 / global_batch)
+    else:
+        logits_s = jnp.einsum("bd,md->bm", f, w[ids].astype(dt),
+                              preferred_element_type=jnp.float32) * scale
+        logits_s = logits_s - logq[None, :]
+        # drop invalid columns and accidental hits (a sampled id equal to
+        # the row's own label would double-count that class in Z)
+        acc_hit = (v_start + ids)[None, :] == y_loc[:, None]
+        logits_s = jnp.where(samp_valid[None, :] & ~acc_hit, logits_s,
+                             NEG_INF)
+        logits = jnp.concatenate([logits_s, logit_y[:, None]], axis=1)
+        label_col = jnp.full((f_loc.shape[0],), logits_s.shape[1], jnp.int32)
+        loss, metrics = _finish_ce(logits, label_col, owned, model_axis,
+                                   tuple(batch_axes), 1.0 / global_batch)
     metrics = dict(metrics)
     metrics["sample_frac"] = sample_frac
     return loss, metrics

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
+
 
 class CompressedGraph(NamedTuple):
     """Per-model-shard CSR of local neighbors. Leading axis = model shard when
@@ -63,12 +65,16 @@ def _merge_topk(best_v, best_i, new_v, new_i, k):
 
 
 def ring_knn_local(w_loc, *, k: int, kprime: int, model_axis: str, n_shards: int,
-                   compute_dtype=jnp.bfloat16):
+                   compute_dtype=jnp.bfloat16, backend: str = "ref"):
     """shard_map body: exact KNN of the full W from per-device blocks.
 
     w_loc: [N_loc, D] local rows. Returns global neighbor ids [N_loc, k].
     Pass 1: bf16 ring scoring into a running top-k'. Pass 2: fp32 re-rank of
     the k' survivors (recomputed against the traveling block).
+
+    ``backend="pallas"`` fuses each hop's score + top-k' through the
+    ``kernels.ops.dist_topk`` kernel (the [N_loc, N_loc] score tile stays in
+    VMEM); ``ref`` keeps the einsum + merge-sweep formulation.
     """
     n_loc, d = w_loc.shape
     wn = w_loc.astype(jnp.float32)
@@ -81,11 +87,21 @@ def ring_knn_local(w_loc, *, k: int, kprime: int, model_axis: str, n_shards: int
     def hop(step, carry):
         block, bv, bi = carry
         src = (my - step) % n_shards  # owner of the block we hold now
-        scores = jnp.einsum("nd,md->nm", w16, block,
-                            preferred_element_type=jnp.float32)
-        ids = (src * n_loc + jnp.arange(n_loc, dtype=jnp.int32))[None, :]
-        ids = jnp.broadcast_to(ids, scores.shape)
-        bv, bi = _merge_topk(bv, bi, scores, ids, kprime)
+        if backend == "pallas":
+            # fused score + per-hop top-k'; the traveling block's local ids
+            # are shifted to global AFTER the kernel (src is traced, block
+            # geometry is static)
+            hv, hi = ops.dist_topk(w16, block, kprime,
+                                   block_q=min(128, n_loc),
+                                   block_n=min(128, n_loc))
+            hi = jnp.where(hi >= 0, hi + src * n_loc, -1)
+            bv, bi = _merge_topk(bv, bi, hv, hi, kprime)
+        else:
+            scores = jnp.einsum("nd,md->nm", w16, block,
+                                preferred_element_type=jnp.float32)
+            ids = (src * n_loc + jnp.arange(n_loc, dtype=jnp.int32))[None, :]
+            ids = jnp.broadcast_to(ids, scores.shape)
+            bv, bi = _merge_topk(bv, bi, scores, ids, kprime)
         block = jax.lax.ppermute(block, model_axis, perm)
         return block, bv, bi
 
@@ -117,16 +133,17 @@ def ring_knn_local(w_loc, *, k: int, kprime: int, model_axis: str, n_shards: int
 
 
 def build_graph_distributed(mesh, w_sharded, *, k: int, kprime: int,
-                            model_axis: str = "model"):
+                            model_axis: str = "model", backend: str = "ref"):
     """Run the ring build under shard_map on a W sharded over ``model``.
     Returns the global graph [N, k] (row-sharded the same way)."""
     from jax.sharding import PartitionSpec as P
 
     n_shards = mesh.shape[model_axis]
     body = functools.partial(ring_knn_local, k=k, kprime=kprime,
-                             model_axis=model_axis, n_shards=n_shards)
+                             model_axis=model_axis, n_shards=n_shards,
+                             backend=backend)
     fn = jax.shard_map(body, mesh=mesh, in_specs=P(model_axis, None),
-                       out_specs=P(model_axis, None))
+                       out_specs=P(model_axis, None), check_vma=False)
     return jax.jit(fn)(w_sharded)
 
 

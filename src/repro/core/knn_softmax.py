@@ -24,7 +24,9 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.sharded_softmax import _finish_ce, _flat_axis_index, _normalize
+from repro.kernels import ops
+from repro.core.sharded_softmax import (_finish_ce, _finish_ce_stats,
+                                        _flat_axis_index, _normalize)
 
 BIG_RANK = 1 << 20
 
@@ -95,12 +97,17 @@ def knn_softmax_local(
     f_loc, y_loc, w_loc, offsets_loc, neighbors_loc, ranks_loc=None, *,
     model_axis: str, batch_axes: Sequence[str], global_batch: int,
     m_local: int, k_cap: int, cosine_scale: float = 16.0,
-    pad_random: bool = True, n_valid: int = 0,
+    pad_random: bool = True, n_valid: int = 0, backend: str = "ref",
+    block_a: int = 128,
 ):
     """shard_map body for the KNN-softmax loss (counterpart of
     full_softmax_local). offsets_loc [1, N+1] / neighbors_loc / ranks_loc
     [1, nnz] arrive with the leading model-shard axis from the sharded
-    CompressedGraph."""
+    CompressedGraph. ``backend="pallas"`` replaces the dense
+    gather-then-softmax (w_loc[ids] -> [b, m_local] logits) with the fused
+    active-class sparse-CE kernel (``ops.sparse_ce_stats``): the gather and
+    the online softmax run in one streamed sweep and neither the gathered
+    weights nor the logit tensor reach HBM."""
     offsets = offsets_loc.reshape(-1)
     neighbors = neighbors_loc.reshape(-1)
     ranks = ranks_loc.reshape(-1) if ranks_loc is not None else None
@@ -110,25 +117,38 @@ def knn_softmax_local(
     ids, valid = select_active(
         y_loc, offsets, neighbors, v_loc=v_loc, m_local=m_local,
         k_cap=k_cap, pad_random=pad_random, ranks=ranks)
-
-    dt = f_loc.dtype
-    f = _normalize(f_loc)
-    w_act = _normalize(w_loc[ids])  # [m_local, D]; bwd = scatter-add into W
-    logits = jnp.einsum("bd,md->bm", f, w_act.astype(dt),
-                        preferred_element_type=jnp.float32) * cosine_scale
     if n_valid:  # mask padded vocab rows that slipped in as random fillers
         valid = valid & ((v_start + ids) < n_valid)
-    logits = jnp.where(valid[None, :], logits, -1e30)
 
     # label position within the active set (owner shard only)
     y_rel = (y_loc - v_start).astype(jnp.int32)
     owned = (y_rel >= 0) & (y_rel < v_loc)
     hit = (ids[None, :] == y_rel[:, None]) & valid[None, :]
-    pos = jnp.argmax(hit, axis=1).astype(jnp.int32)
     owned = owned & jnp.any(hit, axis=1)  # label must be in the active set
 
-    loss, metrics = _finish_ce(logits, pos, owned, model_axis,
-                               tuple(batch_axes), 1.0 / global_batch)
+    if backend == "pallas":
+        f = _normalize(f_loc).astype(jnp.float32)
+        wn = _normalize(w_loc).astype(jnp.float32)  # rows; == gather-then-norm
+        gids = v_start + ids
+        bias = jnp.zeros((ids.shape[0],), jnp.float32)
+        m, z, corr, amax = ops.sparse_ce_stats(
+            f, wn, ids, gids, bias, valid.astype(jnp.int32), y_loc,
+            cosine_scale, block_a, False)
+        corr = jnp.where(owned, corr, 0.0)
+        pred_gid = jnp.where(amax >= 0, gids[jnp.maximum(amax, 0)], -1)
+        loss, metrics = _finish_ce_stats(m, z, corr, pred_gid, y_loc, owned,
+                                         model_axis, tuple(batch_axes),
+                                         1.0 / global_batch)
+    else:
+        dt = f_loc.dtype
+        f = _normalize(f_loc)
+        w_act = _normalize(w_loc[ids])  # [m_local,D]; bwd = scatter-add to W
+        logits = jnp.einsum("bd,md->bm", f, w_act.astype(dt),
+                            preferred_element_type=jnp.float32) * cosine_scale
+        logits = jnp.where(valid[None, :], logits, -1e30)
+        pos = jnp.argmax(hit, axis=1).astype(jnp.int32)
+        loss, metrics = _finish_ce(logits, pos, owned, model_axis,
+                                   tuple(batch_axes), 1.0 / global_batch)
     max_t = model_axis if isinstance(model_axis, tuple) else (model_axis,)
     metrics["active_frac"] = jax.lax.pmean(
         jnp.mean(valid.astype(jnp.float32)), max_t + tuple(batch_axes))

@@ -16,6 +16,13 @@ einsum) and the scalar loss is averaged over the data axes.
 
 These are *shard_map bodies*: they see local shards and use lax collectives
 explicitly, so the paper's communication pattern is visible in the HLO.
+
+Every body takes ``backend="ref" | "pallas"``: ``ref`` is the plain-XLA
+einsum path below; ``pallas`` streams the local scoring through the fused
+kernels in ``repro.kernels`` (``ops.ce_shard_stats``) so the [B, V_local]
+logit tensor never materializes, then completes the softmax with the same
+two collectives via ``_finish_ce_stats``. Loss and grads agree to fp32
+tolerance (tests/test_backend_parity.py).
 """
 from __future__ import annotations
 
@@ -23,6 +30,8 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 NEG_INF = -1e30
 
@@ -112,15 +121,74 @@ def _finish_ce(logits, owned_label_pos, owned, model_axis,
     return loss, {"accuracy": acc, "logz": logz}
 
 
+def _finish_ce_stats(m_loc, z_loc, corr_loc, pred_gid, y, owned, model_axis,
+                     batch_axes, batch_weight):
+    """Distributed-CE tail from per-shard ONLINE-SOFTMAX STATS (the Pallas
+    backend's counterpart of ``_finish_ce``, which takes dense logits).
+
+    m_loc/z_loc/corr_loc [b]: each shard's running max, partition sum
+    relative to it, and label-logit contribution (0 off the owner shard).
+    pred_gid [b]: the shard's best candidate as a GLOBAL class id (-1 when
+    the shard scored nothing). Gradients flow through z_loc/corr_loc into
+    the streaming backward kernels; m_loc is a non-differentiable statistic
+    (ops module doc), so the pmax below needs no explicit stop_gradient —
+    its cotangent is discarded exactly.
+    """
+    m_sg = jax.lax.stop_gradient(m_loc)
+    m = jax.lax.pmax(m_sg, model_axis)
+    z_resc = jnp.where(jnp.isfinite(m_sg), jnp.exp(m_sg - m), 0.0)
+    z = jax.lax.psum(z_loc * z_resc, model_axis)
+    corr = jax.lax.psum(corr_loc, model_axis)  # [b] label logit
+    per_sample = jnp.log(z) + m - corr
+    loss = jax.lax.psum(jnp.sum(per_sample) * batch_weight,
+                        tuple(batch_axes))
+
+    # distributed top-1 accuracy (metrics only — no gradient)
+    is_best = m_sg >= m  # ties: >=; duplicates across shards unlikely
+    pred_here = owned & is_best & (pred_gid == y)
+    correct = jax.lax.psum(pred_here.astype(jnp.float32), model_axis) > 0
+    acc = jax.lax.psum(jnp.sum(correct.astype(jnp.float32)) * batch_weight,
+                       tuple(batch_axes))
+    logz = jax.lax.pmean(jnp.mean(jnp.log(z) + m), tuple(batch_axes))
+    return loss, {"accuracy": acc, "logz": logz}
+
+
+def _shard_limit(v_start, v_loc: int, n_valid: int):
+    """Valid-column count of this shard (traced): masks Megatron-style vocab
+    padding inside the fused kernels. n_valid == 0 means no padding."""
+    if not n_valid:
+        return jnp.asarray(v_loc, jnp.int32)
+    return jnp.clip(n_valid - v_start, 0, v_loc).astype(jnp.int32)
+
+
 def full_softmax_local(
     f_loc, y_loc, w_loc, *, model_axis: str,
     batch_axes: Sequence[str], global_batch: int, cosine_scale: float = 0.0,
-    n_valid: int = 0,
+    n_valid: int = 0, backend: str = "ref", block_v: int = 512,
 ):
     """shard_map body. f_loc [b,D] (replicated along model), y_loc [b] global
     class ids, w_loc [V_loc, D] this device's class shard (row offset derived
     from the device's model-axis index). n_valid > 0 masks padded vocab rows
-    (Megatron-style padding) out of the partition function."""
+    (Megatron-style padding) out of the partition function. ``backend``
+    routes the [b, V_loc] scoring through XLA (ref) or the streaming fused-CE
+    kernel (pallas — the logit tensor never hits HBM)."""
+    if backend == "pallas":
+        f, w = ((_normalize(f_loc), _normalize(w_loc)) if cosine_scale > 0
+                else (f_loc, w_loc))
+        scale = cosine_scale if cosine_scale > 0 else 1.0
+        v_loc = w_loc.shape[0]
+        v_start = _flat_axis_index(model_axis) * v_loc
+        pos = (y_loc - v_start).astype(jnp.int32)
+        owned = (pos >= 0) & (pos < v_loc)
+        y_local = jnp.where(owned, pos, -1)
+        limit = _shard_limit(v_start, v_loc, n_valid)
+        m, z, corr, amax = ops.ce_shard_stats(
+            f.astype(jnp.float32), w.astype(jnp.float32), y_local, limit,
+            scale, block_v)
+        pred_gid = jnp.where(amax >= 0, v_start + amax, -1)
+        return _finish_ce_stats(m, z, corr, pred_gid, y_loc, owned,
+                                model_axis, tuple(batch_axes),
+                                1.0 / global_batch)
     dt = f_loc.dtype
     f, w = ((_normalize(f_loc), _normalize(w_loc)) if cosine_scale > 0
             else (f_loc, w_loc.astype(dt)))
@@ -140,6 +208,75 @@ def full_softmax_local(
                       1.0 / global_batch)
 
 
+def _combine_argmax(vmax, gid, model_axis):
+    """One winner per row across model shards: lowest shard index among
+    ties. vmax [b] local best value, gid [b] its global class id."""
+    gmax = jax.lax.pmax(vmax, model_axis)
+    shard_idx = _flat_axis_index(model_axis)
+    is_best = vmax >= gmax
+    winner_shard = jax.lax.pmin(
+        jnp.where(is_best, shard_idx, jnp.iinfo(jnp.int32).max), model_axis)
+    mine = is_best & (shard_idx == winner_shard)
+    return jax.lax.psum(jnp.where(mine, gid, 0), model_axis).astype(jnp.int32)
+
+
+def serve_argmax_local(f_loc, w_loc, *, model_axis: str, n_valid: int = 0,
+                       block_v: int = 512):
+    """Pallas-backend greedy decode: distributed argmax token ids WITHOUT
+    materializing the [b, V_loc] logit tensor — the streaming kernel's
+    (max, argmax) stats plus one pmax/pmin/psum combine. Counterpart of
+    ``serve_logits_local`` (which returns the dense local logits too)."""
+    v_loc = w_loc.shape[0]
+    v_start = _flat_axis_index(model_axis) * v_loc
+    limit = _shard_limit(v_start, v_loc, n_valid)
+    b = f_loc.shape[0]
+    y_none = jnp.full((b,), -1, jnp.int32)
+    m, _, _, amax = ops.ce_shard_stats(
+        f_loc.astype(jnp.float32), w_loc.astype(jnp.float32), y_none, limit,
+        1.0, block_v)
+    gid = v_start + jnp.maximum(amax, 0)
+    vmax = jnp.where(amax >= 0, m, -jnp.inf)
+    return _combine_argmax(vmax, gid, model_axis), None
+
+
+def serve_topk_local(f_loc, w_loc, k: int, *, model_axis: str,
+                     n_valid: int = 0, backend: str = "ref",
+                     chunk: int = 2048):
+    """Top-k retrieval with scores (ROADMAP "serving beyond greedy argmax").
+
+    Each shard scores its class block ([b, V_loc] — serving's product IS the
+    scores), selects its local top-k per row (``ref``: lax.top_k; ``pallas``:
+    the divide-and-conquer stage-1 kernel via ``ops.topk_rows`` — paper
+    Fig. 5 applied to retrieval), then one all-gather over the model axis
+    merges the P*k survivors. Returns (vals [b,k] desc, gids [b,k] int32),
+    replicated along the model axis.
+    """
+    logits = jnp.einsum("bd,vd->bv", f_loc, w_loc.astype(f_loc.dtype),
+                        preferred_element_type=jnp.float32)
+    v_loc = w_loc.shape[0]
+    v_start = _flat_axis_index(model_axis) * v_loc
+    if n_valid:
+        col = v_start + jnp.arange(v_loc)
+        logits = jnp.where((col < n_valid)[None, :], logits, NEG_INF)
+    kk = min(k, v_loc)
+    if backend == "pallas":
+        vals, idx = ops.topk_rows(logits, kk, chunk=chunk)
+    else:
+        vals, idx = jax.lax.top_k(logits, kk)
+    gids = v_start + idx.astype(jnp.int32)
+    if kk < k:  # more slots than local classes: pad before the merge
+        pad = k - kk
+        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        gids = jnp.pad(gids, ((0, 0), (0, pad)), constant_values=-1)
+    all_v = jax.lax.all_gather(vals, model_axis, axis=0)   # [P, b, k]
+    all_g = jax.lax.all_gather(gids, model_axis, axis=0)
+    b = vals.shape[0]
+    flat_v = jnp.moveaxis(all_v, 0, 1).reshape(b, -1)      # [b, P*k]
+    flat_g = jnp.moveaxis(all_g, 0, 1).reshape(b, -1)
+    top_v, pos = jax.lax.top_k(flat_v, k)
+    return top_v, jnp.take_along_axis(flat_g, pos, axis=1)
+
+
 def serve_logits_local(f_loc, w_loc, *, model_axis: str, n_valid: int = 0):
     """Decode-time local logits [b, V_loc] + distributed argmax token ids.
 
@@ -153,14 +290,6 @@ def serve_logits_local(f_loc, w_loc, *, model_axis: str, n_valid: int = 0):
         logits = jnp.where((col < n_valid)[None, :], logits, NEG_INF)
     amax = jnp.argmax(logits, axis=-1)
     vmax = jnp.take_along_axis(logits, amax[:, None], axis=1)[:, 0]
-    gmax = jax.lax.pmax(vmax, model_axis)
-    shard_idx = _flat_axis_index(model_axis)
     v_loc = w_loc.shape[0]
-    gid = shard_idx * v_loc + amax
-    # exactly-one winner: the lowest shard index among ties
-    is_best = vmax >= gmax
-    winner_shard = jax.lax.pmin(
-        jnp.where(is_best, shard_idx, jnp.iinfo(jnp.int32).max), model_axis)
-    mine = is_best & (shard_idx == winner_shard)
-    token = jax.lax.psum(jnp.where(mine, gid, 0), model_axis)
-    return token.astype(jnp.int32), logits
+    gid = _flat_axis_index(model_axis) * v_loc + amax.astype(jnp.int32)
+    return _combine_argmax(vmax, gid, model_axis), logits

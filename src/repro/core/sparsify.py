@@ -9,7 +9,9 @@ is a masked-dense psum whose *wire* bytes are accounted analytically
 (``wire_bytes``: k × (4B value + 4B index) per tensor) for the roofline and
 the Table-4 model; the top-k *selection* — the part the paper spends §3.3.2
 optimizing — is real compute and runs through the divide-and-conquer
-selector (Pallas kernel on TPU, ``kernels/topk_dc``; jnp fallback here).
+selector. ``DGCConfig.backend`` picks the stage-1 implementation:
+``"pallas"`` runs the ``kernels.ops.topk_threshold`` kernel, ``"ref"`` the
+pure-jnp formulation below (same chunked algorithm, ``lax.top_k`` stage 1).
 
 "Grouping tensors with similar size" (Fig. 5) is implemented by packing
 flattened leaves into ~equal byte buckets and running one selection per
@@ -105,7 +107,13 @@ def dgc_exchange(
     Returns (averaged dense update pytree, new state, info dict with wire
     accounting).
     """
-    topk = topk_fn or functools.partial(topk_threshold_dc, chunk=cfg.chunk)
+    if topk_fn is not None:
+        topk = topk_fn
+    elif cfg.backend == "pallas":
+        from repro.kernels import ops
+        topk = functools.partial(ops.topk_threshold, chunk=cfg.chunk)
+    else:
+        topk = functools.partial(topk_threshold_dc, chunk=cfg.chunk)
     leaves, treedef = jax.tree.flatten(grads)
     u_leaves = treedef.flatten_up_to(state.u)
     v_leaves = treedef.flatten_up_to(state.v)

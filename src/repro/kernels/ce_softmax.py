@@ -3,15 +3,26 @@ shard — the paper's softmax-stage hotspot (§3.2: ">80% of the time is spent
 in the softmax stage ... over 10 GB for the output space of the last fc").
 
 Forward: grid sweeps vocab tiles; each tile does an MXU matmul
-f [B,D] @ W_tile [bv,D]^T and folds it into online-softmax running
-(max m, sum z, label logit corr) carried in VMEM scratch — the [B, V_local]
-logit tensor NEVER exists in HBM (that is the 10 GB the paper pays).
+f [B,D] @ W_tile [bv,D]^T and folds it into online-softmax running stats
+(max m, sum z, label logit corr, argmax col) carried in VMEM scratch — the
+[B, V_local] logit tensor NEVER exists in HBM (that is the 10 GB the paper
+pays). A traced ``limit`` scalar (SMEM) masks columns >= limit, which covers
+both Megatron-style vocab padding (n_valid) and the kernel's own block_v
+padding in one mechanism. (Candidate-set CE with per-column bias — the
+sampled head's -logQ — lives in sparse_ce.py, not here.)
 
-Backward: second sweep recomputes each tile's probabilities from (m, z) and
-accumulates df (VMEM scratch) while writing dW tiles directly:
-    dlogits = (softmax - onehot(label)) * g
+Backward: second sweep recomputes each tile's scores and applies the
+caller-provided per-row cotangents (gz for the partition sum, gc for the
+label logit):
+    dlogits_j = (exp(s_j - m) * gz + onehot_j(label) * gc) * scale
     df += dlogits @ W_tile ; dW_tile = dlogits^T @ f
-Fused in ops.fused_ce via jax.custom_vjp.
+Parameterizing the backward by (gz, gc) instead of a scalar loss cotangent
+lets the SAME kernel serve the single-shard loss (ops.fused_ce: gz = g/z,
+gc = -g) and the distributed sharded loss (ops.ce_shard_stats: gz/gc arrive
+from autodiff of the cross-shard pmax/psum completion). The per-row max m is
+returned as a non-differentiable statistic — its true total derivative
+cancels exactly against z's internal rescaling, so ignoring its cotangent is
+mathematically exact, not an approximation.
 """
 from __future__ import annotations
 
@@ -22,16 +33,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+NEG = -jnp.inf
 
-def _fwd_kernel(f_ref, w_ref, y_ref, m_ref, z_ref, corr_ref,
-                acc_m, acc_z, acc_c, *, bv: int, scale: float):
+
+def _fwd_kernel(lim_ref, f_ref, w_ref, y_ref,
+                m_ref, z_ref, corr_ref, amax_ref,
+                acc_m, acc_z, acc_c, acc_a, *, bv: int, scale: float):
     j = pl.program_id(0)
 
     @pl.when(j == 0)
     def _init():
-        acc_m[...] = jnp.full_like(acc_m, -jnp.inf)
+        acc_m[...] = jnp.full_like(acc_m, NEG)
         acc_z[...] = jnp.zeros_like(acc_z)
         acc_c[...] = jnp.zeros_like(acc_c)
+        acc_a[...] = jnp.full_like(acc_a, -1)
 
     f = f_ref[...]                                    # [B, D]
     w = w_ref[...]                                    # [bv, D]
@@ -39,15 +54,23 @@ def _fwd_kernel(f_ref, w_ref, y_ref, m_ref, z_ref, corr_ref,
                             preferred_element_type=jnp.float32) * scale
     y = y_ref[...]                                    # [B] local label ids
     col = j * bv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = col < lim_ref[0]                          # vocab + block padding
+    s = jnp.where(valid, s, NEG)
     hit = col == y[:, None]
     # fold the label logit (each label hits exactly one tile)
     acc_c[...] += jnp.sum(jnp.where(hit, s, 0.0), axis=1)
 
     m_old = acc_m[...]
-    m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
-    # rescale the running sum to the new max (online softmax)
+    tile_m = jnp.max(s, axis=1)                       # NEG if tile all-masked
+    tile_a = j * bv + jnp.argmax(s, axis=1).astype(jnp.int32)
+    m_new = jnp.maximum(m_old, tile_m)
+    acc_a[...] = jnp.where(tile_m > m_old, tile_a, acc_a[...])
+    # rescale the running sum to the new max (online softmax); masked columns
+    # contribute 0 via the `valid` select, which also discards the NaN from
+    # exp(-inf - -inf) on fully-masked rows
     zcorr = jnp.where(jnp.isfinite(m_old), jnp.exp(m_old - m_new), 0.0)
-    acc_z[...] = acc_z[...] * zcorr + jnp.sum(jnp.exp(s - m_new[:, None]), axis=1)
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    acc_z[...] = acc_z[...] * zcorr + jnp.sum(p, axis=1)
     acc_m[...] = m_new
 
     @pl.when(j == pl.num_programs(0) - 1)
@@ -55,50 +78,57 @@ def _fwd_kernel(f_ref, w_ref, y_ref, m_ref, z_ref, corr_ref,
         m_ref[...] = acc_m[...]
         z_ref[...] = acc_z[...]
         corr_ref[...] = acc_c[...]
+        amax_ref[...] = acc_a[...]
 
 
-def ce_forward(f, w, y, *, block_v: int = 512, scale: float = 1.0,
-               interpret: bool = True):
+def ce_forward(f, w, y, *, limit=None, block_v: int = 512,
+               scale: float = 1.0, interpret: bool = True):
     """f [B,D], w [V,D], y [B] local ids (out-of-range = not owned).
-    Returns (m, z, corr) per row, fp32."""
+
+    ``limit`` (traced int scalar, default V) masks columns >= limit out of
+    the softmax — Megatron vocab padding on the owning shard.
+    Returns per-row fp32 (m, z, corr, amax): running max, partition sum
+    relative to m, label logit, argmax column (-1 when all columns masked).
+    """
     b, d = f.shape
     v = w.shape[0]
-    pv = (-v) % block_v
+    bv = min(block_v, max(8, v))
+    pv = (-v) % bv
     if pv:
         w = jnp.pad(w, ((0, pv), (0, 0)))
     vp = w.shape[0]
-    # out-of-shard labels must not fold anything: padded tile cols score like
-    # real ones, so map OOR labels to -1 (never matches col iota)
+    if limit is None:
+        limit = jnp.asarray(v, jnp.int32)
+    lim = jnp.minimum(jnp.asarray(limit, jnp.int32), v).reshape(1)
+    # out-of-shard labels must not fold anything: map them to -1 (never
+    # matches the col iota)
     y = jnp.where((y >= 0) & (y < v), y, -1)
-    # padded rows of W are zero -> logits 0; they inflate z. Mask by pushing
-    # their scores out via a -inf bias column trick: instead we subtract
-    # their contribution: exp(0 - m) per padded col. Simpler: pad W with a
-    # large negative first component and zero feature? We instead handle it
-    # here: compute with padded cols, then remove analytically below.
-    m, z, corr = pl.pallas_call(
-        functools.partial(_fwd_kernel, bv=block_v, scale=scale),
+    m, z, corr, amax = pl.pallas_call(
+        functools.partial(_fwd_kernel, bv=bv, scale=scale),
         out_shape=(jax.ShapeDtypeStruct((b,), jnp.float32),
                    jax.ShapeDtypeStruct((b,), jnp.float32),
-                   jax.ShapeDtypeStruct((b,), jnp.float32)),
-        grid=(vp // block_v,),
-        in_specs=[pl.BlockSpec((b, d), lambda j: (0, 0)),
-                  pl.BlockSpec((block_v, d), lambda j: (j, 0)),
+                   jax.ShapeDtypeStruct((b,), jnp.float32),
+                   jax.ShapeDtypeStruct((b,), jnp.int32)),
+        grid=(vp // bv,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((b, d), lambda j: (0, 0)),
+                  pl.BlockSpec((bv, d), lambda j: (j, 0)),
                   pl.BlockSpec((b,), lambda j: (0,))],
         out_specs=(pl.BlockSpec((b,), lambda j: (0,)),
+                   pl.BlockSpec((b,), lambda j: (0,)),
                    pl.BlockSpec((b,), lambda j: (0,)),
                    pl.BlockSpec((b,), lambda j: (0,))),
         scratch_shapes=[pltpu.VMEM((b,), jnp.float32),
                         pltpu.VMEM((b,), jnp.float32),
-                        pltpu.VMEM((b,), jnp.float32)],
+                        pltpu.VMEM((b,), jnp.float32),
+                        pltpu.VMEM((b,), jnp.int32)],
         interpret=interpret,
-    )(f.astype(jnp.float32), w.astype(jnp.float32), y.astype(jnp.int32))
-    if pv:  # remove the pv zero-logit contributions exp(0*scale - m)
-        z = z - pv * jnp.exp(-m)
-    return m, z, corr
+    )(lim, f.astype(jnp.float32), w.astype(jnp.float32), y.astype(jnp.int32))
+    return m, z, corr, amax
 
 
-def _bwd_kernel(f_ref, w_ref, y_ref, m_ref, z_ref, g_ref, dw_ref, df_ref,
-                acc_df, *, bv: int, scale: float, n_valid: int):
+def _bwd_kernel(lim_ref, f_ref, w_ref, y_ref, m_ref, gz_ref, gc_ref,
+                dw_ref, df_ref, acc_df, *, bv: int, scale: float):
     j = pl.program_id(0)
 
     @pl.when(j == 0)
@@ -109,14 +139,16 @@ def _bwd_kernel(f_ref, w_ref, y_ref, m_ref, z_ref, g_ref, dw_ref, df_ref,
     w = w_ref[...]
     s = jax.lax.dot_general(f, w, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    m = m_ref[...]
-    z = z_ref[...]
-    g = g_ref[...]                                    # upstream dloss [B]
-    p = jnp.exp(s - m[:, None]) / z[:, None]          # [B, bv]
+    m = m_ref[...]                                    # [B] forward's row max
+    gz = gz_ref[...]                                  # [B] dL/dz
+    gc = gc_ref[...]                                  # [B] dL/dcorr
     y = y_ref[...]
     col = j * bv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    p = jnp.where(col < n_valid, p, 0.0)              # padded cols: no grad
-    dl = (p - (col == y[:, None]).astype(jnp.float32)) * g[:, None] * scale
+    valid = col < lim_ref[0]
+    p = jnp.where(valid & jnp.isfinite(m)[:, None],
+                  jnp.exp(s - m[:, None]), 0.0)       # [B, bv] exp rel. to m
+    hit = (col == y[:, None]).astype(jnp.float32)
+    dl = (p * gz[:, None] + hit * gc[:, None]) * scale
     dw_ref[...] = jax.lax.dot_general(
         dl, f, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)           # [bv, D]
@@ -129,31 +161,42 @@ def _bwd_kernel(f_ref, w_ref, y_ref, m_ref, z_ref, g_ref, dw_ref, df_ref,
         df_ref[...] = acc_df[...]
 
 
-def ce_backward(f, w, y, m, z, g, *, block_v: int = 512, scale: float = 1.0,
+def ce_backward(f, w, y, m, gz, gc, *, limit=None,
+                block_v: int = 512, scale: float = 1.0,
                 interpret: bool = True):
-    """Streamed backward. Returns (df [B,D], dw [V,D]) fp32."""
+    """Streamed backward from per-row cotangents.
+
+    m is the forward's per-row running max (residual); gz / gc are the
+    cotangents of the forward's z / corr outputs. Returns (df [B,D],
+    dw [V,D]) fp32.
+    """
     b, d = f.shape
     v = w.shape[0]
-    pv = (-v) % block_v
+    bv = min(block_v, max(8, v))
+    pv = (-v) % bv
     if pv:
         w = jnp.pad(w, ((0, pv), (0, 0)))
     vp = w.shape[0]
+    if limit is None:
+        limit = jnp.asarray(v, jnp.int32)
+    lim = jnp.minimum(jnp.asarray(limit, jnp.int32), v).reshape(1)
     y = jnp.where((y >= 0) & (y < v), y, -1)
     dw, df = pl.pallas_call(
-        functools.partial(_bwd_kernel, bv=block_v, scale=scale, n_valid=v),
+        functools.partial(_bwd_kernel, bv=bv, scale=scale),
         out_shape=(jax.ShapeDtypeStruct((vp, d), jnp.float32),
                    jax.ShapeDtypeStruct((b, d), jnp.float32)),
-        grid=(vp // block_v,),
-        in_specs=[pl.BlockSpec((b, d), lambda j: (0, 0)),
-                  pl.BlockSpec((block_v, d), lambda j: (j, 0)),
+        grid=(vp // bv,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((b, d), lambda j: (0, 0)),
+                  pl.BlockSpec((bv, d), lambda j: (j, 0)),
                   pl.BlockSpec((b,), lambda j: (0,)),
                   pl.BlockSpec((b,), lambda j: (0,)),
                   pl.BlockSpec((b,), lambda j: (0,)),
                   pl.BlockSpec((b,), lambda j: (0,))],
-        out_specs=(pl.BlockSpec((block_v, d), lambda j: (j, 0)),
+        out_specs=(pl.BlockSpec((bv, d), lambda j: (j, 0)),
                    pl.BlockSpec((b, d), lambda j: (0, 0))),
         scratch_shapes=[pltpu.VMEM((b, d), jnp.float32)],
         interpret=interpret,
-    )(f.astype(jnp.float32), w.astype(jnp.float32), y.astype(jnp.int32),
-      m, z, g)
+    )(lim, f.astype(jnp.float32), w.astype(jnp.float32), y.astype(jnp.int32),
+      m, gz.astype(jnp.float32), gc.astype(jnp.float32))
     return df, dw[:v]

@@ -35,7 +35,12 @@ def main(argv=None):
                    choices=["full", "knn", "selective", "mach", "sampled",
                             "csoft"],
                    default="full")
+    p.add_argument("--topk", type=int, default=0,
+                   help="paper system: return the k best classes per query "
+                        "with scores (0 = greedy argmax)")
     # shared
+    p.add_argument("--backend", choices=["ref", "pallas"], default="ref",
+                   help="head hot-path compute backend")
     p.add_argument("--batch", type=int, default=8)
     args = p.parse_args(argv)
 
@@ -47,9 +52,21 @@ def main(argv=None):
     if args.system == "paper":
         exp = Experiment.from_config(
             system="paper", classes=args.classes, feat_dim=args.feat_dim,
-            batch=args.batch, head=HeadConfig(softmax_impl=args.head),
+            batch=args.batch,
+            head=HeadConfig(softmax_impl=args.head, backend=args.backend),
             log_every=0)
         t0 = time.perf_counter()
+        if args.topk:
+            ids, scores = exp.serve(batch=args.batch, top_k=args.topk,
+                                    return_scores=True)
+            dt = time.perf_counter() - t0
+            print(f"[serve] {args.head}-head top-{args.topk} retrieval over "
+                  f"{args.classes} classes ({args.backend}): "
+                  f"{ids.shape[0]} queries in {dt*1e3:.1f} ms")
+            print("[serve] first query ids:   ", ids[0].tolist())
+            print("[serve] first query scores:",
+                  [round(float(s), 3) for s in scores[0]])
+            return 0
         preds = exp.serve(batch=args.batch)
         dt = time.perf_counter() - t0
         print(f"[serve] {args.head}-head retrieval over {args.classes} "

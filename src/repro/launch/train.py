@@ -36,6 +36,9 @@ def parse_args(argv=None):
                    choices=["full", "knn", "selective", "mach", "sampled",
                             "csoft"],
                    default="full", help="softmax head strategy")
+    p.add_argument("--backend", choices=["ref", "pallas"], default="ref",
+                   help="head hot-path compute backend (pallas = fused "
+                        "kernels, interpret mode on CPU)")
     p.add_argument("--knn", action="store_true",
                    help="back-compat alias for --head knn")
     p.add_argument("--dgc", action="store_true")
@@ -68,8 +71,8 @@ def main(argv=None):
         impl = "knn" if (args.knn and args.head == "full") else args.head
         # sampled_n below the class count so the estimator path (partial
         # draw + logQ correction) is what actually runs, smoke included
-        hcfg = HeadConfig(softmax_impl=impl, knn_k=16, knn_kprime=32,
-                          active_frac=0.1, rebuild_every=100,
+        hcfg = HeadConfig(softmax_impl=impl, backend=args.backend, knn_k=16,
+                          knn_kprime=32, active_frac=0.1, rebuild_every=100,
                           sampled_n=max(64, args.classes // 4))
         fcfg = FCCSConfig(eta0=args.lr, t_warm=max(1, args.steps // 10),
                           b0=args.batch, b_min=args.batch,
@@ -77,7 +80,7 @@ def main(argv=None):
                           t_ini=args.steps // 4, t_final=args.steps)
         tcfg = TrainConfig(optimizer=args.optimizer, fccs=fcfg,
                            dgc=DGCConfig(enabled=args.dgc, sparsity=0.99,
-                                         chunk=2048))
+                                         chunk=2048, backend=args.backend))
         exp = Experiment.from_config(
             system="paper", trunk=args.trunk, classes=args.classes,
             feat_dim=args.feat_dim, batch=args.batch, head=hcfg, train=tcfg,
@@ -91,8 +94,8 @@ def main(argv=None):
     exp = Experiment.from_config(
         system="zoo", arch=args.arch, reduced=args.reduced,
         batch=args.batch, seq=args.seq,
-        head=HeadConfig(softmax_impl=impl, knn_k=16, knn_kprime=32,
-                        active_frac=0.1, rebuild_every=100),
+        head=HeadConfig(softmax_impl=impl, backend=args.backend, knn_k=16,
+                        knn_kprime=32, active_frac=0.1, rebuild_every=100),
         train=TrainConfig(optimizer=args.optimizer),
         ckpt_dir=args.ckpt_dir or None)
     exp.fit(args.steps, lr=args.lr)

@@ -10,6 +10,9 @@ algorithm* — a shard_map over "model" whose body is ANY registered
 over ("pod","data"); per-head aux state (KNN graph, LSH tables, bucket
 hashes) and head-owned trainable params travel as head-provided pytrees
 (``make_head_train_step``). Legacy full/knn entry points remain as shims.
+``HeadConfig.backend="pallas"`` works unchanged here too — the head body
+carries the fused-kernel route (docs/kernels.md), so the zoo trainer
+accepts it without a single branch in this module.
 
 Provides the step builders the dry-run lowers for every
 (arch × input-shape): train_step, prefill_step, serve_step (one decode token

@@ -18,7 +18,9 @@ The softmax head is a pluggable ``repro.api.SoftmaxHead`` strategy (full /
 knn / selective / mach / ...): the head owns its trainable params, its aux
 state (graphs, hash tables), the PartitionSpecs that place both on the ring,
 and its shard_map loss body. The step builders below are head-agnostic —
-no ``use_knn`` booleans, no head-specific branches.
+no ``use_knn`` booleans, no head-specific branches — and that includes the
+compute backend: ``HeadConfig.backend="pallas"`` swaps the head bodies onto
+the fused kernels (docs/kernels.md) with zero trainer changes.
 
 Everything is a single shard_map over the full mesh — all collectives
 explicit, nothing left to GSPMD — so the HLO *is* the paper's Fig. 2/4.
@@ -294,6 +296,42 @@ def make_serve_step(model_cfg: ModelConfig, head_cfg: HeadConfig, mesh,
         pred, _ = head.eval_logits_local(f_all, head_params, head_aux,
                                          model_axis=AXIS)
         return pred.astype(jnp.int32)
+
+    structure = {k: v for k, v in _input_structure(model_cfg).items()
+                 if k != "labels"}
+    return _make_deploy_fn(model_cfg, mesh, state_template, head, body,
+                           structure)
+
+
+def make_topk_serve_step(model_cfg: ModelConfig, head_cfg: HeadConfig, mesh,
+                         state_template: HybridState, top_k: int, *,
+                         head: Optional[SoftmaxHead] = None):
+    """Top-k retrieval with scores (ROADMAP "serving beyond greedy argmax"):
+    (state, inputs) -> (scores [b, k] desc, global class ids [b, k]).
+
+    W-heads only (the [V, D] retrieval index IS the trained head); each
+    shard's local top-k is selected by ``lax.top_k`` (ref backend) or the
+    row-wise divide-and-conquer selector ``kernels.ops.topk_rows`` (pallas
+    stage-1 kernel), then merged with one all-gather along the ring."""
+    from repro.core.sharded_softmax import _normalize, serve_topk_local
+
+    head = head or make_head(model_cfg, head_cfg)
+    if not head.params_are_class_weights:
+        raise NotImplementedError(
+            f"top-k serving retrieves against the [V, D] class matrix, "
+            f"which the {head.name!r} head does not train; use a W-head "
+            f"(full/knn/selective/sampled)")
+
+    def body(fe_params, head_params, head_aux, inputs_loc):
+        f = _flat_features(model_cfg, fe_params, inputs_loc)
+        f_all = jax.lax.all_gather(f, AXIS, axis=0, tiled=True)
+        f_all = f_all.astype(jnp.float32)
+        w = head_params.astype(jnp.float32)
+        if head_cfg.cosine_scale > 0:
+            f_all, w = _normalize(f_all), _normalize(w)
+        return serve_topk_local(
+            f_all, w, top_k, model_axis=AXIS, n_valid=head.n_valid,
+            backend=head.backend)
 
     structure = {k: v for k, v in _input_structure(model_cfg).items()
                  if k != "labels"}
