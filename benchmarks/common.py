@@ -4,12 +4,25 @@ Benchmarks run on 8 fake host devices (set before jax import by run.py).
 CPU wall-clock is NOT TPU-representative; each table therefore reports both
 measured time and the derived/model quantity the paper's table is about
 (accuracy, wire bytes, selection cost, iteration counts).
+
+``write_bench`` is the perf-trajectory seam: benchmarks append
+schema-versioned records to ``BENCH_<table>.json`` at the repo root, so
+every PR's speed claim can be checked against the records the previous
+PRs committed (ROADMAP "start measuring"). The file is a JSON array; each
+record carries the schema version, a UTC timestamp, the jax/device
+environment, and the benchmark's own payload dict.
 """
 from __future__ import annotations
 
+import datetime
+import json
+import os
 import time
 
 import jax
+
+BENCH_SCHEMA = 1
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def timeit(fn, *args, n: int = 20, warmup: int = 3):
@@ -27,3 +40,33 @@ def timeit(fn, *args, n: int = 20, warmup: int = 3):
 
 def row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_bench(name: str, payload: dict, *, root: str = None) -> str:
+    """Append one schema-versioned record to ``BENCH_<name>.json``.
+
+    ``payload`` is the benchmark's own result dict (must be
+    JSON-serializable). Returns the file path. Records are never
+    rewritten — the file is the trajectory, one record per run."""
+    path = os.path.join(root or REPO_ROOT, f"BENCH_{name}.json")
+    records = []
+    if os.path.exists(path):
+        with open(path) as f:
+            records = json.load(f)
+        if not isinstance(records, list):
+            raise ValueError(
+                f"{path} is not a BENCH trajectory (expected a JSON array)")
+    records.append({
+        "schema": BENCH_SCHEMA,
+        "table": name,
+        "written": datetime.datetime.now(datetime.timezone.utc)
+                   .isoformat(timespec="seconds"),
+        "jax": jax.__version__,
+        "platform": jax.devices()[0].platform,
+        "n_devices": len(jax.devices()),
+        "payload": payload,
+    })
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path

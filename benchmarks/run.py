@@ -19,9 +19,10 @@ def main(argv=None):
     os.environ.setdefault(
         "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-    from benchmarks import (table2_knn_accuracy, table3_knn_throughput,
-                            table4_comm, table5_sparse_accuracy,
-                            table6_topk, table7_fccs, table8_end2end)
+    from benchmarks import (serve_replay, table2_knn_accuracy,
+                            table3_knn_throughput, table4_comm,
+                            table5_sparse_accuracy, table6_topk, table7_fccs,
+                            table8_end2end)
     tables = {
         "table2": table2_knn_accuracy.run,
         "table3": table3_knn_throughput.run,
@@ -30,6 +31,7 @@ def main(argv=None):
         "table6": table6_topk.run,
         "table7": table7_fccs.run,
         "table8": table8_end2end.run,
+        "serve": serve_replay.run,
     }
     only = set(args.only.split(",")) if args.only else set(tables)
     print("name,us_per_call,derived")

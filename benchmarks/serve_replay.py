@@ -1,0 +1,168 @@
+"""Load-replay benchmark for the ``repro.serving`` tier.
+
+Drives the batched serving engine with a synthetic production-shaped
+workload — bursty arrivals (Poisson base + on/off bursts) x Zipfian query
+mix — and reports what a serving SLO cares about: p50/p95/p99 request
+latency, sustained QPS, micro-batch occupancy, and score-cache hit-rate,
+for an uncached and a cached run over the IDENTICAL trace. Appends one
+schema-versioned record to ``BENCH_serve.json`` (see
+``benchmarks.common.write_bench``) — the repo's serving perf trajectory.
+
+Latency model: arrivals and coalescer deadlines advance a virtual clock;
+each micro-batch's compute is measured wall-clock and charged against a
+single serial executor (a batch starts when the previous one finishes),
+so queueing during bursts shows up in the tail exactly as a busy server.
+CPU wall-clock is NOT TPU-representative — the numbers gate regressions
+of the serving path, not absolute throughput claims.
+
+  PYTHONPATH=src:. python benchmarks/serve_replay.py --classes 4096 \
+      --head full [--backend pallas] [--topk 5] [--quick] [--out DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def run(quick: bool = False, *, classes: int = 4096, feat_dim: int = 64,
+        head: str = "full", backend: str = "ref", topk: int = 5,
+        duration: float = 2.0, pool: int = 256, zipf: float = 1.1,
+        max_batch: int = 32, max_wait_ms: float = 2.0,
+        cache_capacity: int = 1024, cosine_threshold: float = 0.0,
+        seed: int = 0, out_root: str = None, write: bool = True) -> dict:
+    import numpy as np
+
+    from benchmarks.common import row, write_bench
+    from repro.api import Experiment
+    from repro.configs.base import HeadConfig
+    from repro.serving import (ScoreCache, TraceConfig, VirtualClock,
+                               generate_trace, latency_stats,
+                               make_query_pool, replay_trace)
+
+    if quick:
+        classes = min(classes, 256)
+        duration = min(duration, 0.4)
+        pool = min(pool, 64)
+        max_batch = min(max_batch, 8)
+
+    exp = Experiment.from_config(
+        system="paper", classes=classes, feat_dim=feat_dim, batch=max_batch,
+        head=HeadConfig(softmax_impl=head, backend=backend), log_every=0)
+    # sketch heads decode greedy (no [V, D] retrieval index to top-k over)
+    top_k = topk if (topk and exp.head.params_are_class_weights) else None
+
+    tcfg = TraceConfig(duration=duration, pool=pool, zipf_s=zipf, seed=seed)
+    times, qids = generate_trace(tcfg)
+    queries = make_query_pool(classes, feat_dim, pool, seed=seed)
+    runs = {}
+    for mode in ("uncached", "cached"):
+        cache = None
+        if mode == "cached":
+            cache = ScoreCache(cache_capacity,
+                               cosine_threshold=cosine_threshold or None)
+        clock = VirtualClock()
+        eng = exp.serving_engine(top_k=top_k, max_batch=max_batch,
+                                 max_wait_ms=max_wait_ms, cache=cache,
+                                 clock=clock.now)
+        eng.warmup(queries[0])
+        done = replay_trace(eng, clock, times, qids, queries)
+        assert len(done) == len(times), (len(done), len(times))
+        lat = latency_stats(done)
+        st = eng.stats()
+        span = (max(r.t_done for r in done) - min(r.t_submit for r in done)
+                if done else 0.0)
+        runs[mode] = {
+            **lat,
+            "qps": lat["n"] / span if span > 0 else 0.0,
+            "mean_batch_occupancy": st["mean_batch_occupancy"],
+            "n_batches": st["n_batches"],
+            "cache_hit_rate": st["cache_hit_rate"],
+            "compute_s": st["compute_s"],
+            "results": {r.rid: np.atleast_1d(r.ids) for r in done},
+        }
+        row(f"serve/{mode}_p99", runs[mode]["p99_ms"] * 1e3,
+            f"p50_ms={lat['p50_ms']:.2f} p95_ms={lat['p95_ms']:.2f} "
+            f"p99_ms={lat['p99_ms']:.2f} qps={runs[mode]['qps']:.1f} "
+            f"occupancy={st['mean_batch_occupancy']:.2f} "
+            f"hit_rate={st['cache_hit_rate']:.2f}")
+
+    # the exact-match cache must not change results: cached-run answers are
+    # bitwise-equal to the uncached run over the identical trace (cosine
+    # hits deliberately trade exactness and are exempt)
+    if not cosine_threshold:
+        res_u, res_c = runs["uncached"]["results"], runs["cached"]["results"]
+        same = all((res_u[rid] == res_c[rid]).all() for rid in res_u)
+        row("serve/cache_consistency", 0.0, f"cached_equals_uncached={same}")
+        assert same, "cache returned different ids than fresh computation"
+    for r in runs.values():
+        r.pop("results")
+
+    payload = {
+        "quick": quick,
+        "config": {
+            "classes": classes, "feat_dim": feat_dim, "head": head,
+            "backend": backend, "top_k": top_k, "max_batch": max_batch,
+            "max_wait_ms": max_wait_ms, "cache_capacity": cache_capacity,
+            "cosine_threshold": cosine_threshold or None,
+            "trace": {"duration": duration, "pool": pool, "zipf_s": zipf,
+                      "base_rate": tcfg.base_rate,
+                      "burst_rate": tcfg.burst_rate, "seed": seed,
+                      "n_requests": int(times.shape[0]),
+                      "expected_rate": tcfg.expected_rate},
+        },
+        "uncached": runs["uncached"],
+        "cached": runs["cached"],
+    }
+    if write:
+        path = write_bench("serve", payload, root=out_root)
+        print(f"# BENCH record appended to {path}")
+    return payload
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="reduced sizes (CI / smoke)")
+    p.add_argument("--classes", type=int, default=4096)
+    p.add_argument("--feat-dim", type=int, default=64)
+    p.add_argument("--head", default="full",
+                   choices=["full", "knn", "selective", "mach", "sampled",
+                            "csoft"])
+    p.add_argument("--backend", choices=["ref", "pallas"], default="ref")
+    p.add_argument("--topk", type=int, default=5,
+                   help="0 = greedy argmax serving")
+    p.add_argument("--duration", type=float, default=2.0,
+                   help="virtual seconds of trace")
+    p.add_argument("--pool", type=int, default=256,
+                   help="distinct queries in the Zipfian mix")
+    p.add_argument("--zipf", type=float, default=1.1)
+    p.add_argument("--max-batch", type=int, default=32)
+    p.add_argument("--max-wait-ms", type=float, default=2.0)
+    p.add_argument("--cache-capacity", type=int, default=1024)
+    p.add_argument("--cosine-threshold", type=float, default=0.0,
+                   help="accept near-duplicate cached queries at this "
+                        "cosine similarity (0 = exact-match only)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", default=None, metavar="DIR",
+                   help="directory for BENCH_serve.json (default: repo "
+                        "root — the committed trajectory)")
+    p.add_argument("--no-write", action="store_true",
+                   help="don't append a BENCH record")
+    args = p.parse_args(argv)
+    # 8 fake devices for the hybrid-parallel mesh (before jax import)
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    print("name,us_per_call,derived")
+    run(quick=args.quick, classes=args.classes, feat_dim=args.feat_dim,
+        head=args.head, backend=args.backend, topk=args.topk,
+        duration=args.duration, pool=args.pool, zipf=args.zipf,
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        cache_capacity=args.cache_capacity,
+        cosine_threshold=args.cosine_threshold, seed=args.seed,
+        out_root=args.out, write=not args.no_write)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

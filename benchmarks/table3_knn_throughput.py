@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import jax
 
-from benchmarks.common import row, timeit
+from benchmarks.common import row, timeit, write_bench
 from repro.api.heads import make_head
 from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
 from repro.data.synthetic import ClassificationStream, sku_feature_batch
@@ -62,12 +62,13 @@ def run_backends(quick: bool = False, heads=ALL_HEADS):
     return results
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, *, write: bool = True, out_root: str = None):
     sizes = [1024, 32768] if quick else [4096, 32768, 131072]
     D, B = 64, 128
     mesh = hybrid.make_hybrid_mesh(8)
     tcfg = TrainConfig(optimizer="sgd")
     speedups = {}
+    step_times = {}
     for N in sizes:
         stream = ClassificationStream(N, D, seed=0)
         mcfg = ModelConfig(name="t3", family="feats", n_layers=0, d_model=D,
@@ -91,6 +92,7 @@ def run(quick: bool = False):
                 times[name] = t
                 row(f"table3/N{N}_{name}", t * 1e6,
                     f"images_per_s={B / t:.0f}")
+        step_times[N] = times
         speedups[N] = times["full"] / times["knn"]
         row(f"table3/N{N}_speedup", 0.0, f"knn_vs_full={speedups[N]:.2f}x")
 
@@ -108,7 +110,15 @@ def run(quick: bool = False):
     ks = sorted(speedups)
     row("table3/claim_speedup_grows_with_N", 0.0,
         f"holds={speedups[ks[-1]] >= speedups[ks[0]]}")
-    run_backends(quick=quick, heads=("full", "knn") if quick else ALL_HEADS)
+    backends = run_backends(quick=quick,
+                            heads=("full", "knn") if quick else ALL_HEADS)
+    if write:
+        write_bench("table3", {
+            "quick": quick,
+            "step_s": {str(N): t for N, t in step_times.items()},
+            "knn_speedup": {str(N): s for N, s in speedups.items()},
+            "backend_step_s": {h: t for h, t in backends.items()},
+        }, root=out_root)
     return speedups
 
 

@@ -35,6 +35,29 @@ echo "=== paper / top-5 serve / pallas backend ==="
 python -m repro.launch.serve --devices 8 --system paper --classes 512 \
     --head full --batch 16 --topk 5 --backend pallas
 
+# serving tier: tiny load replays (full-softmax retrieval + a sketch head)
+# through the coalescing/caching engine; BENCH_serve.json goes to a temp
+# dir so smoke never dirties the committed perf trajectory
+echo "=== serving tier / load replay (full + csoft) ==="
+BENCH_TMP=$(mktemp -d)
+trap 'rm -rf "$BENCH_TMP"' EXIT
+PYTHONPATH=src:. python benchmarks/serve_replay.py --quick --head full \
+    --out "$BENCH_TMP"
+PYTHONPATH=src:. python benchmarks/serve_replay.py --quick --head csoft \
+    --topk 0 --out "$BENCH_TMP"
+python - "$BENCH_TMP" <<'EOF'
+import json, sys
+records = json.load(open(sys.argv[1] + "/BENCH_serve.json"))
+assert len(records) == 2, f"expected 2 replay records, got {len(records)}"
+for rec in records:
+    for mode in ("uncached", "cached"):
+        r = rec["payload"][mode]
+        assert r["p99_ms"] > 0.0, (mode, r)
+        assert 0.0 <= r["cache_hit_rate"] <= 1.0, (mode, r)
+    assert rec["payload"]["cached"]["cache_hit_rate"] > 0.0
+print("BENCH_serve.json: p99 + cache hit-rate fields OK")
+EOF
+
 # zoo: the default full head plus the two newest registry heads (every head
 # goes through the same gspmd.make_head_train_step seam)
 for head in full sampled csoft; do

@@ -27,7 +27,21 @@ from typing import Any, Callable, Optional
 
 from repro.configs.base import (DGCConfig, FCCSConfig, HeadConfig,
                                 InputShape, ModelConfig, TrainConfig,
-                                get_model_config, pad_vocab)
+                                effective_vocab, get_model_config, pad_vocab)
+
+
+def _validate_serve_args(n_classes: int, batch: Optional[int],
+                         top_k: Optional[int]):
+    """Reject bad serving knobs with a clear error instead of an opaque
+    jit shape failure downstream (used by both systems AND both
+    launchers)."""
+    if batch is not None and batch <= 0:
+        raise ValueError(
+            f"serve batch must be a positive query count, got {batch}")
+    if top_k is not None and not 0 < top_k <= n_classes:
+        raise ValueError(
+            f"top_k must be in [1, num_classes={n_classes}], got {top_k} "
+            f"(retrieval cannot return more classes than exist)")
 
 
 def paper_model_config(trunk: str = "feats", classes: int = 4096,
@@ -65,6 +79,16 @@ class Experiment:
     def serve(self, *args, **kw):
         raise NotImplementedError
 
+    def serving_engine(self, *, top_k: Optional[int] = None, **kw):
+        """A ``repro.serving.ServingEngine`` over this experiment's trained
+        head: async ``submit()`` of single queries, coalesced into padded
+        micro-batches, optional hot-query score cache (see
+        docs/serving.md). Works on both systems (paper hybrid retrieval /
+        zoo GSPMD feature classification)."""
+        from repro.serving import ServingEngine
+        _validate_serve_args(effective_vocab(self.model_cfg), None, top_k)
+        return ServingEngine.for_experiment(self, top_k=top_k, **kw)
+
 
 # ---------------------------------------------------------------------------
 # paper system
@@ -100,6 +124,7 @@ class PaperExperiment(Experiment):
             log_every=log_every, seed=seed)
         self._serve_step = None
         self._topk_steps: dict = {}
+        self._engines: dict = {}
 
     def _default_data_fn(self):
         from repro.data.synthetic import (ClassificationStream,
@@ -136,13 +161,22 @@ class PaperExperiment(Experiment):
         k-best retrieval with scores — each shard's local top-k (ref:
         ``lax.top_k``; pallas: the divide-and-conquer ``ops.topk_rows``
         kernel) merged over the ring — returning ids [b, k] (descending), or
-        (ids, scores) when ``return_scores`` is set."""
+        (ids, scores) when ``return_scores`` is set.
+
+        Without explicit ``inputs`` the call is routed through the
+        ``repro.serving`` engine (per-query submit -> one padded
+        micro-batch -> batched serve step); results are bitwise-identical
+        to the pre-engine path and to per-query submission
+        (tests/test_serving.py). Explicit ``inputs`` keep the legacy
+        single-shot jitted step (batch must then divide the ring)."""
         import jax
 
         from repro.train import hybrid
 
+        _validate_serve_args(effective_vocab(self.model_cfg), batch, top_k)
         if inputs is None:
-            inputs = self.data_fn(10**6, batch or self.batch)
+            return self._serve_via_engine(batch or self.batch, top_k,
+                                          return_scores)
         if top_k is not None:
             if top_k not in self._topk_steps:
                 self._topk_steps[top_k] = hybrid.make_topk_serve_step(
@@ -158,6 +192,37 @@ class PaperExperiment(Experiment):
                 head=self.trainer.head)
         with jax.set_mesh(self.mesh):
             return jax.device_get(self._serve_step(self.state, inputs))
+
+    def _serve_via_engine(self, batch: int, top_k: Optional[int],
+                          return_scores: bool):
+        """Batched serving through the ``repro.serving`` engine: one
+        engine per (top_k, batch) shape, all queries submitted then
+        drained as a single full micro-batch. No cache on this path (a
+        synchronous facade call wants fresh scores, and determinism)."""
+        import numpy as np
+
+        key = (top_k, batch)
+        eng = self._engines.get(key)
+        if eng is None:
+            # max_batch >= 2 keeps even a 1-query call on the batched-gemm
+            # bucket shapes every other path uses (bitwise consistency)
+            eng = self.serving_engine(top_k=top_k,
+                                      max_batch=max(batch, 2),
+                                      max_wait_ms=0.0, cache=None)
+            self._engines[key] = eng
+        inputs = self.data_fn(10**6, batch)
+        qkey = next(k for k in inputs if k != "labels")
+        queries = np.asarray(inputs[qkey])
+        for i in range(batch):
+            eng.submit(queries[i])
+        done = sorted(eng.drain(), key=lambda r: r.rid)
+        assert len(done) == batch
+        if top_k is None:
+            return np.stack([r.ids for r in done]).astype(np.int32)
+        ids = np.stack([r.ids for r in done])
+        if return_scores:
+            return ids, np.stack([r.scores for r in done])
+        return ids
 
 
 # ---------------------------------------------------------------------------
@@ -375,6 +440,11 @@ class ZooExperiment(Experiment):
         from repro.models import decoder as dec_lib
         from repro.models import lm
 
+        _validate_serve_args(effective_vocab(self.model_cfg), batch, None)
+        if prompt_len <= 0 or gen <= 0:
+            raise ValueError(
+                f"prompt_len and gen must be positive, got "
+                f"prompt_len={prompt_len} gen={gen}")
         cfg = self.model_cfg
         if cfg.family == "encdec":
             raise NotImplementedError(

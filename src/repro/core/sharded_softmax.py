@@ -277,6 +277,34 @@ def serve_topk_local(f_loc, w_loc, k: int, *, model_axis: str,
     return top_v, jnp.take_along_axis(flat_g, pos, axis=1)
 
 
+def mask_padded_rows(x, n_queries, fill):
+    """Serving-tier padding mask: rows >= ``n_queries`` of a fixed-shape
+    micro-batch are coalescer padding, not real queries — force them to
+    ``fill`` so batch shape never leaks into results. Works for [b] and
+    [b, k] outputs; ``n_queries`` may be traced (one jit per bucket shape,
+    NOT per occupancy)."""
+    b = x.shape[0]
+    keep = (jnp.arange(b) < n_queries).reshape((b,) + (1,) * (x.ndim - 1))
+    return jnp.where(keep, x, fill)
+
+
+def serve_topk_batched_local(f_loc, w_loc, k: int, n_queries, *,
+                             model_axis: str, n_valid: int = 0,
+                             backend: str = "ref", chunk: int = 2048):
+    """Multi-query serving entry point (the serving tier's hot path).
+
+    ``f_loc`` is a PADDED micro-batch [b_pad, D] REPLICATED along the model
+    axis (the engine feeds every shard the full batch — no ring gather on
+    the serve path) with only the first ``n_queries`` rows real. Scoring is
+    row-independent, so padding never perturbs real rows; padded rows come
+    back as (-inf, -1). Returns (vals [b_pad, k] desc, gids [b_pad, k])."""
+    vals, gids = serve_topk_local(f_loc, w_loc, k, model_axis=model_axis,
+                                  n_valid=n_valid, backend=backend,
+                                  chunk=chunk)
+    return (mask_padded_rows(vals, n_queries, -jnp.inf),
+            mask_padded_rows(gids, n_queries, -1))
+
+
 def serve_logits_local(f_loc, w_loc, *, model_axis: str, n_valid: int = 0):
     """Decode-time local logits [b, V_loc] + distributed argmax token ids.
 

@@ -7,16 +7,60 @@ lookup, executed on the training mesh with whatever head is configured
 token serving: prefill once, then greedy decode steps through the KV/SSM
 cache and the sharded-vocab argmax.
 
+``--replay SECONDS`` switches either system onto the ``repro.serving``
+tier instead: single feature queries from a bursty Zipfian synthetic
+trace are submitted to a ``ServingEngine`` (request coalescing into
+padded micro-batches, ``--max-wait-ms`` flush deadline, optional
+``--cache N`` LRU score cache) and the run reports p50/p95/p99 latency,
+QPS, batch occupancy, and cache hit-rate. The full harness (trajectory
+file, cached-vs-uncached sweep) lives in ``benchmarks/serve_replay.py``.
+
   PYTHONPATH=src python -m repro.launch.serve --devices 8 \
       --arch smollm_135m --reduced --prompt-len 32 --gen 16 --batch 8
   PYTHONPATH=src python -m repro.launch.serve --devices 8 --system paper \
       --classes 4096 --head knn --batch 64
+  PYTHONPATH=src python -m repro.launch.serve --devices 8 --system paper \
+      --classes 4096 --head full --topk 5 --replay 1.0 --cache 512 \
+      --max-wait-ms 2
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+
+def _run_replay(exp, args, feat_dim: int) -> int:
+    """Trace-driven serving through the engine (both systems)."""
+    import numpy as np
+
+    from repro.serving import (ScoreCache, TraceConfig, VirtualClock,
+                               generate_trace, latency_stats,
+                               make_query_pool, replay_trace)
+
+    tcfg = TraceConfig(duration=args.replay)
+    times, qids = generate_trace(tcfg)
+    pool = make_query_pool(args.classes, feat_dim, tcfg.pool)
+    cache = ScoreCache(args.cache) if args.cache else None
+    clock = VirtualClock()
+    eng = exp.serving_engine(
+        top_k=args.topk or None, max_batch=args.batch,
+        max_wait_ms=args.max_wait_ms, cache=cache, clock=clock.now)
+    eng.warmup(pool[0])
+    done = replay_trace(eng, clock, times, qids, pool)
+    lat = latency_stats(done)
+    st = eng.stats()
+    span = max(r.t_done for r in done) - min(r.t_submit for r in done)
+    print(f"[serve] replayed {lat['n']} requests over {args.replay:.1f}s "
+          f"of trace ({args.head} head, top-{args.topk or 1}): "
+          f"p50={lat['p50_ms']:.2f}ms p95={lat['p95_ms']:.2f}ms "
+          f"p99={lat['p99_ms']:.2f}ms qps={lat['n'] / max(span, 1e-9):.1f}")
+    print(f"[serve] batches={st['n_batches']} "
+          f"occupancy={st['mean_batch_occupancy']:.2f} "
+          f"cache_hit_rate={st['cache_hit_rate']:.2f}")
+    pred = done[0].ids
+    print("[serve] first result ids:", np.atleast_1d(pred).tolist())
+    return 0
 
 
 def main(argv=None):
@@ -42,7 +86,33 @@ def main(argv=None):
     p.add_argument("--backend", choices=["ref", "pallas"], default="ref",
                    help="head hot-path compute backend")
     p.add_argument("--batch", type=int, default=8)
+    # serving tier (repro.serving engine)
+    p.add_argument("--replay", type=float, default=0.0, metavar="SECONDS",
+                   help="replay a bursty Zipfian synthetic trace of this "
+                        "many (virtual) seconds through the serving "
+                        "engine instead of a one-shot batch")
+    p.add_argument("--cache", type=int, default=0, metavar="N",
+                   help="LRU hot-query score-cache capacity for --replay "
+                        "(0 = no cache)")
+    p.add_argument("--max-wait-ms", type=float, default=2.0,
+                   help="coalescer flush deadline: max time a queued query "
+                        "waits for batch-mates before a partial "
+                        "micro-batch is cut")
     args = p.parse_args(argv)
+
+    # validate up front: a clear argparse error beats an opaque jit shape
+    # failure out of the serving step
+    if args.batch <= 0:
+        p.error(f"--batch must be a positive query count, got {args.batch}")
+    if args.topk < 0:
+        p.error(f"--topk must be >= 0, got {args.topk}")
+    if args.system == "paper" and args.topk > args.classes:
+        p.error(f"--topk {args.topk} exceeds --classes {args.classes}: "
+                f"retrieval cannot return more classes than exist")
+    if args.cache < 0:
+        p.error(f"--cache must be >= 0, got {args.cache}")
+    if args.max_wait_ms < 0:
+        p.error(f"--max-wait-ms must be >= 0, got {args.max_wait_ms}")
 
     from repro.api.bootstrap import ensure_host_devices
     ensure_host_devices(args.devices)
@@ -55,6 +125,8 @@ def main(argv=None):
             batch=args.batch,
             head=HeadConfig(softmax_impl=args.head, backend=args.backend),
             log_every=0)
+        if args.replay > 0:
+            return _run_replay(exp, args, args.feat_dim)
         t0 = time.perf_counter()
         if args.topk:
             ids, scores = exp.serve(batch=args.batch, top_k=args.topk,
@@ -76,7 +148,16 @@ def main(argv=None):
 
     exp = Experiment.from_config(system="zoo", arch=args.arch,
                                  reduced=args.reduced, batch=args.batch,
-                                 seq=args.prompt_len + args.gen)
+                                 seq=args.prompt_len + args.gen,
+                                 head=HeadConfig(softmax_impl=args.head,
+                                                 backend=args.backend))
+    if args.replay > 0:
+        # zoo replay serves FEATURE queries against the model's class
+        # matrix (the classifier-as-retrieval path); token decoding stays
+        # on the one-shot path below
+        args = argparse.Namespace(**{**vars(args),
+                                     "classes": exp.model_cfg.vocab_size})
+        return _run_replay(exp, args, exp.model_cfg.d_model)
     try:
         t0 = time.perf_counter()
         gen = exp.serve(prompt_len=args.prompt_len, gen=args.gen,

@@ -1,0 +1,33 @@
+"""``repro.serving`` — the batched, cached, trace-driven serving tier.
+
+The paper's system exists to put the 100M-class head in front of real
+retail traffic; this package is the "millions of users, heavy traffic"
+leg of that made concrete:
+
+  * ``Coalescer`` — packs async-submitted single queries into fixed-shape
+    micro-batches (power-of-two bucketed padding bounds jit recompiles; a
+    max-wait flush deadline bounds tail latency).
+  * ``ServingEngine`` — one ``submit()/poll()/drain()`` API over the
+    per-head batched top-k / greedy retrieval steps, with per-request
+    timing, donated input buffers, and an optional score cache. Usable
+    from both the paper (hybrid) and zoo (GSPMD) systems via
+    ``ServingEngine.for_experiment``.
+  * ``ScoreCache`` — LRU hot-query score cache (embedding-keyed exact
+    match, optional cosine-threshold hits) for head-of-distribution
+    traffic, invalidated when the served weights refresh.
+  * ``repro.serving.trace`` — synthetic bursty/Zipfian trace generator +
+    ``VirtualClock`` for load replay (``benchmarks/serve_replay.py``).
+
+See docs/serving.md for the lifecycle, the knobs, and the BENCH schema.
+"""
+from repro.serving.cache import ScoreCache
+from repro.serving.coalescer import Coalescer, MicroBatch, Request, bucket_for
+from repro.serving.engine import ServingEngine, latency_stats, replay_trace
+from repro.serving.trace import (TraceConfig, VirtualClock, generate_trace,
+                                 make_query_pool)
+
+__all__ = [
+    "Coalescer", "MicroBatch", "Request", "ScoreCache", "ServingEngine",
+    "TraceConfig", "VirtualClock", "bucket_for", "generate_trace",
+    "latency_stats", "make_query_pool", "replay_trace",
+]

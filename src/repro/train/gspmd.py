@@ -373,6 +373,60 @@ def make_head_eval_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
     return eval_fn
 
 
+def make_feature_serve_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
+                            par: ParallelConfig, mesh, *,
+                            top_k: Optional[int] = None,
+                            head: Optional["SoftmaxHead"] = None,
+                            donate: bool = True):
+    """Zoo entry for the serving tier (``repro.serving``): classify
+    pre-computed backbone features against the model's class matrix.
+
+    Queries arrive as a PADDED fixed-shape micro-batch [b_pad, D]
+    replicated across the mesh, with only the first ``n_queries`` rows
+    real (a traced scalar — one compile per padding bucket). Returns
+    ``(params, head_params, head_aux, queries, n_queries) ->``
+    pred [b_pad] int32 (``top_k=None``; any registry head, via its own
+    ``eval_logits_local``) or (vals [b_pad, k], gids [b_pad, k])
+    (``top_k=k``; W-heads only). Padded rows come back -1 / (-inf, -1).
+    """
+    from repro.api.heads import make_head
+    from repro.core.sharded_softmax import (_normalize, mask_padded_rows,
+                                            serve_topk_batched_local)
+    head = head or make_head(model_cfg, head_cfg)
+    if top_k is not None and not head.params_are_class_weights:
+        raise NotImplementedError(
+            f"top-k serving retrieves against the [V, D] class matrix, "
+            f"which the {head.name!r} head does not train; use a W-head "
+            f"(full/knn/selective/sampled)")
+    maxis, _, _ = vocab_axes(par)
+    hp_spec = head.params_spec(maxis)
+    aux_spec = head.aux_spec(maxis)
+
+    def body(hp_loc, aux_loc, queries, n_queries):
+        if top_k is None:
+            pred, _ = head.eval_logits_local(queries, hp_loc, aux_loc,
+                                             model_axis=maxis)
+            return mask_padded_rows(pred.astype(jnp.int32), n_queries, -1)
+        f = queries.astype(jnp.float32)
+        w = hp_loc.astype(jnp.float32)
+        if head_cfg.cosine_scale > 0:
+            f, w = _normalize(f), _normalize(w)
+        return serve_topk_batched_local(
+            f, w, top_k, n_queries, model_axis=maxis, n_valid=head.n_valid,
+            backend=head.backend)
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(hp_spec, aux_spec, P(), P()),
+                       out_specs=P(), check_vma=False)
+
+    def step(params, head_params, head_aux, queries, n_queries):
+        hp = (lm.head_weight(params, model_cfg)
+              if head.params_are_class_weights else head_params)
+        return fn(hp, head_aux, queries, n_queries)
+
+    return jax.jit(step, donate_argnums=(3,)) if donate else jax.jit(step)
+
+
 def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
                     par: ParallelConfig, train_cfg: TrainConfig, mesh,
                     shape: InputShape, *, use_knn: bool = False,

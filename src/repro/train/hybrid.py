@@ -303,6 +303,100 @@ def make_serve_step(model_cfg: ModelConfig, head_cfg: HeadConfig, mesh,
                            structure)
 
 
+def _serve_query_key(model_cfg: ModelConfig) -> str:
+    """The input key a serving-tier query fills (no labels at serve time)."""
+    keys = [k for k in _input_structure(model_cfg) if k != "labels"]
+    if len(keys) != 1:
+        raise NotImplementedError(
+            f"serving-tier queries need a single-input trunk; "
+            f"{model_cfg.family!r} has inputs {keys}")
+    return keys[0]
+
+
+def _make_batched_deploy_fn(model_cfg, mesh, state_template, head, body,
+                            donate: bool):
+    """shard_map wiring for the serving tier's batched steps: queries are
+    REPLICATED (every shard scores the full padded micro-batch — no ring
+    all-gather on the serve path, and no batch-divisibility constraint),
+    ``n_queries`` is a traced scalar (one compile per padding bucket, not
+    per occupancy), and the padded query buffer is donated when the caller
+    is done with it (``donate=True``, the serving engine's default)."""
+    specs = state_specs(state_template, head)
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(specs.fe_params, specs.head_params,
+                                 specs.head_aux, P(), P()),
+                       out_specs=P(), check_vma=False)
+
+    def step(state, queries, n_queries):
+        return fn(state.fe_params, state.head_params, state.head_aux,
+                  queries, n_queries)
+
+    return jax.jit(step, donate_argnums=(1,)) if donate else jax.jit(step)
+
+
+def make_batched_serve_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
+                            mesh, state_template: HybridState, *,
+                            head: Optional[SoftmaxHead] = None,
+                            donate: bool = True):
+    """Serving-tier greedy retrieval over a padded micro-batch.
+
+    (state, queries [b_pad, ...], n_queries []) -> pred [b_pad] int32 with
+    padding rows forced to -1. Works for EVERY registry head (the body is
+    the head's own ``eval_logits_local`` — hashed-bucket decode included),
+    and rows are scored independently, so results for real rows are
+    bitwise-identical across padding buckets >= 2 (tests/test_serving.py).
+    """
+    from repro.core.sharded_softmax import mask_padded_rows
+
+    head = head or make_head(model_cfg, head_cfg)
+    key = _serve_query_key(model_cfg)
+
+    def body(fe_params, head_params, head_aux, queries, n_queries):
+        f = _flat_features(model_cfg, fe_params, {key: queries})
+        pred, _ = head.eval_logits_local(f, head_params, head_aux,
+                                         model_axis=AXIS)
+        return mask_padded_rows(pred.astype(jnp.int32), n_queries, -1)
+
+    return _make_batched_deploy_fn(model_cfg, mesh, state_template, head,
+                                   body, donate)
+
+
+def make_batched_topk_serve_step(model_cfg: ModelConfig,
+                                 head_cfg: HeadConfig, mesh,
+                                 state_template: HybridState, top_k: int, *,
+                                 head: Optional[SoftmaxHead] = None,
+                                 donate: bool = True):
+    """Serving-tier top-k retrieval over a padded micro-batch.
+
+    (state, queries [b_pad, ...], n_queries []) -> (vals [b_pad, k] desc,
+    gids [b_pad, k]) with padding rows forced to (-inf, -1). W-heads only
+    (same contract as ``make_topk_serve_step``); the multi-query body is
+    ``core.sharded_softmax.serve_topk_batched_local``."""
+    from repro.core.sharded_softmax import (_normalize,
+                                            serve_topk_batched_local)
+
+    head = head or make_head(model_cfg, head_cfg)
+    if not head.params_are_class_weights:
+        raise NotImplementedError(
+            f"top-k serving retrieves against the [V, D] class matrix, "
+            f"which the {head.name!r} head does not train; use a W-head "
+            f"(full/knn/selective/sampled)")
+    key = _serve_query_key(model_cfg)
+
+    def body(fe_params, head_params, head_aux, queries, n_queries):
+        f = _flat_features(model_cfg, fe_params, {key: queries})
+        f = f.astype(jnp.float32)
+        w = head_params.astype(jnp.float32)
+        if head_cfg.cosine_scale > 0:
+            f, w = _normalize(f), _normalize(w)
+        return serve_topk_batched_local(
+            f, w, top_k, n_queries, model_axis=AXIS, n_valid=head.n_valid,
+            backend=head.backend)
+
+    return _make_batched_deploy_fn(model_cfg, mesh, state_template, head,
+                                   body, donate)
+
+
 def make_topk_serve_step(model_cfg: ModelConfig, head_cfg: HeadConfig, mesh,
                          state_template: HybridState, top_k: int, *,
                          head: Optional[SoftmaxHead] = None):

@@ -1,0 +1,400 @@
+"""Serving-tier tests: coalescer / cache / trace units, engine-vs-single
+bitwise parity for every registry head x backend, weight-refresh
+invalidation, and the launcher/facade argument validation."""
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks.common import write_bench
+from repro.api import Experiment
+from repro.api.heads import HEAD_REGISTRY, make_head  # noqa: F401
+from repro.configs.base import HeadConfig
+from repro.serving import (Coalescer, Request, ScoreCache, ServingEngine,
+                           TraceConfig, VirtualClock, bucket_for,
+                           generate_trace, latency_stats, make_query_pool,
+                           replay_trace)
+
+ALL_HEADS = ["full", "knn", "selective", "mach", "sampled", "csoft"]
+N, D = 128, 16
+
+
+def _head_cfg(impl, backend="ref"):
+    return HeadConfig(softmax_impl=impl, backend=backend, active_frac=0.5,
+                      knn_k=8, knn_kprime=16, sampled_n=64, csoft_b=32,
+                      csoft_r=4)
+
+
+# ---------------------------------------------------------------------------
+# coalescer
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_for_pow2_floor_cap():
+    assert [bucket_for(n, 2, 64) for n in (1, 2, 3, 4, 5, 9, 63)] == \
+        [2, 2, 4, 4, 8, 16, 64]
+    assert bucket_for(64, 2, 64) == 64
+    assert bucket_for(200, 2, 64) == 64        # overflow clamps to max
+    assert bucket_for(1, 1, 64) == 1           # min_bucket=1 allows matvec
+    assert bucket_for(3, 2, 48) == 4           # non-pow2 cap: pow2 below it
+    assert bucket_for(50, 2, 48) == 48         # ...full batch runs at cap
+
+
+def _req(rid, t):
+    return Request(rid=rid, query=np.float32([rid]), t_submit=t)
+
+
+def test_coalescer_full_batch_cuts_immediately():
+    c = Coalescer(max_batch=4, max_wait=10.0)
+    for i in range(9):
+        c.put(_req(i, t=0.001 * i))
+    batches = c.ready(now=0.01)
+    assert [len(b.requests) for b in batches] == [4, 4]  # 1 leftover waits
+    assert all(b.bucket == 4 for b in batches)
+    assert len(c) == 1
+    assert c.ready(now=0.01) == []             # leftover is younger than wait
+
+
+def test_coalescer_deadline_flush_and_occupancy():
+    c = Coalescer(max_batch=8, max_wait=0.005, min_bucket=2)
+    c.put(_req(0, t=1.0))
+    c.put(_req(1, t=1.001))
+    c.put(_req(2, t=1.002))
+    assert c.ready(now=1.004) == []            # oldest has waited 4ms < 5ms
+    assert c.oldest_deadline() == pytest.approx(1.005)
+    (mb,) = c.ready(now=1.0051)                # oldest expired -> cut all 3
+    assert len(mb.requests) == 3 and mb.bucket == 4
+    assert mb.occupancy == pytest.approx(3 / 4)
+    assert len(c) == 0 and c.oldest_deadline() is None
+
+
+def test_coalescer_cuts_exactly_at_its_reported_deadline():
+    """Regression: (t + w) - t can round below w in float64; a clock
+    advanced exactly to oldest_deadline() must still trigger the cut
+    (this once made replay_trace spin forever)."""
+    assert (1e6 + 0.002) - 1e6 < 0.002          # the rounding this guards
+    for t in (1.0, 123.456, 1e6, 1.7e9):        # incl. epoch-sized stamps
+        c = Coalescer(max_batch=8, max_wait=0.002)
+        c.put(_req(0, t=t))
+        (mb,) = c.ready(now=c.oldest_deadline())
+        assert len(mb.requests) == 1
+
+
+def test_coalescer_deterministic_under_out_of_order_submits():
+    """Same requests, permuted submission order + out-of-order timestamps:
+    identical packing (sorted by (t_submit, seq))."""
+    def pack(order):
+        c = Coalescer(max_batch=4, max_wait=0.0)
+        for i in order:
+            c.put(_req(i, t=2.0 - 0.001 * i))  # later submits = older stamps
+        return [[r.rid for r in mb.requests] for mb in c.flush(now=9.0)]
+
+    base = pack(range(8))
+    assert base == [[7, 6, 5, 4], [3, 2, 1, 0]]   # t_submit order, not rid
+    for order in ([7, 3, 5, 1, 6, 2, 4, 0], list(reversed(range(8)))):
+        assert pack(order) == base
+
+
+# ---------------------------------------------------------------------------
+# score cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_exact_hit_and_lru_eviction():
+    cache = ScoreCache(capacity=2)
+    q = [np.float32([i, i]) for i in range(3)]
+    cache.put(q[0], "a")
+    cache.put(q[1], "b")
+    assert cache.get(q[0]) == ("a", "exact")   # refreshes q0's LRU slot
+    cache.put(q[2], "c")                       # evicts q1 (least recent)
+    assert cache.get(q[1]) is None
+    assert cache.get(q[0]) == ("a", "exact")
+    assert cache.get(q[2]) == ("c", "exact")
+    st = cache.stats()
+    assert st["size"] == 2 and st["misses"] == 1 and st["exact_hits"] == 3
+    assert st["hit_rate"] == pytest.approx(3 / 4)
+
+
+def test_cache_cosine_threshold_hits():
+    cache = ScoreCache(capacity=8, cosine_threshold=0.99)
+    q = np.float32([1.0, 0.0, 0.0])
+    cache.put(q, "hot")
+    near = np.float32([1.0, 0.02, 0.0])        # cos ~ 0.9998
+    far = np.float32([0.0, 1.0, 0.0])          # cos = 0
+    assert cache.get(near) == ("hot", "cosine")
+    assert cache.get(far) is None
+    assert cache.get(2.0 * q) == ("hot", "cosine")  # scale-invariant
+    exact = cache.stats()
+    assert exact["cosine_hits"] == 2 and exact["misses"] == 1
+
+
+def test_cache_invalidate_drops_entries_keeps_counters():
+    cache = ScoreCache(capacity=4)
+    q = np.float32([3.0])
+    cache.put(q, "x")
+    assert cache.get(q) == ("x", "exact")
+    cache.invalidate()
+    assert len(cache) == 0
+    assert cache.get(q) is None
+    st = cache.stats()
+    assert st["invalidations"] == 1 and st["hits"] == 1 and st["misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# trace generator + virtual clock
+# ---------------------------------------------------------------------------
+
+
+def test_trace_reproducible_ascending_and_rate_sane():
+    cfg = TraceConfig(duration=20.0, seed=3)
+    times, qids = generate_trace(cfg)
+    t2, q2 = generate_trace(cfg)
+    assert np.array_equal(times, t2) and np.array_equal(qids, q2)
+    assert np.all(np.diff(times) > 0) and times[-1] < cfg.duration
+    assert qids.min() >= 0 and qids.max() < cfg.pool
+    measured = len(times) / cfg.duration
+    # long-run MMPP rate: generous 35% tolerance for a 20s sample
+    assert abs(measured - cfg.expected_rate) / cfg.expected_rate < 0.35
+
+
+def test_trace_zipf_mix_is_skewed():
+    times, qids = generate_trace(TraceConfig(duration=30.0, zipf_s=1.3,
+                                             pool=64, seed=1))
+    counts = np.bincount(qids, minlength=64)
+    # hottest query dominates a uniform mix by a wide margin
+    assert counts.max() > 3 * len(times) / 64
+    assert counts[0] == counts.max()           # rank 0 is the hottest
+
+
+def test_query_pool_shape_and_clock():
+    pool = make_query_pool(N, D, 7, seed=0)
+    assert pool.shape == (7, D) and pool.dtype == np.float32
+    clk = VirtualClock()
+    clk.advance_to(1.5)
+    clk.advance(0.5)
+    clk.advance_to(1.0)                        # never rewinds
+    assert clk.now() == clk() == 2.0
+    with pytest.raises(ValueError):
+        clk.advance(-0.1)
+
+
+# ---------------------------------------------------------------------------
+# engine mechanics (fake step_fn — no jax)
+# ---------------------------------------------------------------------------
+
+
+def _fake_engine(**kw):
+    calls = []
+
+    def step_fn(queries, n_valid):
+        calls.append((queries.shape, n_valid))
+        ids = np.full(queries.shape[0], -1, np.int32)
+        ids[:n_valid] = queries[:n_valid, 0].astype(np.int32)
+        return ids, None
+
+    return ServingEngine(step_fn, **kw), calls
+
+
+def test_engine_pads_to_bucket_and_masks():
+    clk = VirtualClock()
+    eng, calls = _fake_engine(max_batch=8, max_wait_ms=1.0, clock=clk.now)
+    rids = [eng.submit(np.float32([i, 0.0])) for i in range(3)]
+    assert eng.poll() == []                    # not full, not expired
+    clk.advance(0.002)
+    done = eng.poll()
+    assert calls == [((4, 2), 3)]              # 3 queries -> bucket 4
+    assert sorted(r.rid for r in done) == rids
+    assert [int(r.ids) for r in sorted(done, key=lambda r: r.rid)] == [0, 1, 2]
+    assert all(r.bucket == 4 and r.batch_n == 3 for r in done)
+    st = eng.stats()
+    assert st["n_batches"] == 1
+    assert st["mean_batch_occupancy"] == pytest.approx(3 / 4)
+
+
+def test_engine_serial_server_latency_model():
+    """Two bursts flushed back-to-back: the second batch queues behind the
+    first (t_start == first batch's t_done), so its latency includes the
+    queueing delay."""
+    clk = VirtualClock()
+    eng, _ = _fake_engine(max_batch=2, max_wait_ms=0.0, clock=clk.now)
+    for i in range(4):
+        eng.submit(np.float32([i, 0.0]))
+    done = sorted(eng.drain(), key=lambda r: r.rid)
+    b1, b2 = done[0], done[2]
+    assert b1.t_flush == b2.t_flush == 0.0
+    assert b2.t_start == pytest.approx(b1.t_done)
+    assert b2.latency > b1.latency
+    assert latency_stats(done)["n"] == 4
+    assert latency_stats([])["p99_ms"] == 0.0
+
+
+def test_engine_cache_hits_and_version_invalidation():
+    version = [0]
+    clk = VirtualClock()
+    eng, calls = _fake_engine(max_batch=4, max_wait_ms=0.0, clock=clk.now,
+                              cache=ScoreCache(16),
+                              version_fn=lambda: version[0])
+    q = np.float32([7.0, 0.0])
+    eng.submit(q)
+    (first,) = eng.drain()
+    assert not first.cached and len(calls) == 1
+    eng.submit(q)                              # exact hit, no compute
+    (hit,) = eng.drain()
+    assert hit.cached and int(hit.ids) == int(first.ids)
+    assert len(calls) == 1 and hit.latency == 0.0
+    version[0] += 1                            # weights refreshed
+    eng.submit(q)
+    (recomputed,) = eng.drain()
+    assert not recomputed.cached and len(calls) == 2
+    assert eng.cache.stats()["invalidations"] == 1
+
+
+def test_replay_trace_flushes_lull_tails_at_their_deadline():
+    """A query arriving right before a long lull must be flushed at its
+    max-wait deadline, not at the next arrival."""
+    clk = VirtualClock()
+    eng, _ = _fake_engine(max_batch=8, max_wait_ms=2.0, clock=clk.now)
+    times = np.float64([0.0, 0.001, 1.0])      # 1s lull after two arrivals
+    qids = np.int32([0, 1, 0])
+    pool = np.float32([[5.0, 0.0], [6.0, 0.0]])
+    done = replay_trace(eng, clk, times, qids, pool)
+    assert len(done) == 3
+    early = sorted(done, key=lambda r: r.rid)[0]
+    assert early.t_done == pytest.approx(0.002, abs=1e-4)  # not 1.0
+    assert max(r.latency for r in done) < 0.01
+
+
+# ---------------------------------------------------------------------------
+# engine <-> per-query bitwise parity on the real serve steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def _exp_cache():
+    return {}
+
+
+def _paper_exp(_exp_cache, mesh8, impl, backend):
+    key = (impl, backend)
+    if key not in _exp_cache:
+        _exp_cache[key] = Experiment.from_config(
+            system="paper", classes=N, feat_dim=D, batch=8, mesh=mesh8,
+            head=_head_cfg(impl, backend), log_every=0)
+    return _exp_cache[key]
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("impl", ALL_HEADS)
+def test_engine_batched_equals_per_query(impl, backend, mesh8, _exp_cache):
+    """One micro-batch of K queries returns bitwise the same ids/scores as
+    K single-query submissions (each padded to the min bucket) — the
+    coalescer's shape choices must never change answers."""
+    exp = _paper_exp(_exp_cache, mesh8, impl, backend)
+    top_k = 3 if exp.trainer.head.params_are_class_weights else None
+    queries = make_query_pool(N, D, 5, seed=42)
+    eng = exp.serving_engine(top_k=top_k, max_batch=8)
+
+    for q in queries:
+        eng.submit(q)
+    batched = {r.rid: r for r in eng.drain()}
+    assert len(batched) == 5
+    assert all(r.bucket == 8 and r.batch_n == 5 for r in batched.values())
+
+    for i, q in enumerate(queries):
+        eng.submit(q)
+        (single,) = eng.drain()
+        assert single.bucket == 2
+        ref = batched[i]
+        assert np.array_equal(np.asarray(ref.ids), np.asarray(single.ids))
+        assert np.asarray(ref.ids).min() >= 0   # padded rows never leak
+        if top_k is not None:
+            assert np.array_equal(np.asarray(ref.scores),
+                                  np.asarray(single.scores))
+            assert np.all(np.isfinite(np.asarray(ref.scores)))
+        else:
+            assert single.scores is None
+
+
+def test_serve_facade_routes_through_engine(mesh8, _exp_cache):
+    """Experiment.serve(batch=...) — the engine path — returns the same
+    ids for the same queries as direct engine submission, any batch size
+    (no ring-divisibility constraint)."""
+    exp = _paper_exp(_exp_cache, mesh8, "full", "ref")
+    preds = exp.serve(batch=5)
+    assert preds.shape == (5,) and preds.dtype == np.int32
+    ids, scores = exp.serve(batch=3, top_k=4, return_scores=True)
+    assert ids.shape == (3, 4) and scores.shape == (3, 4)
+    assert np.all(np.diff(scores, axis=1) <= 0)     # descending scores
+    assert exp.serve(batch=1).shape == (1,)         # below the ring size
+
+
+def test_topk_rejected_for_sketch_heads(mesh8, _exp_cache):
+    exp = _paper_exp(_exp_cache, mesh8, "mach", "ref")
+    with pytest.raises(NotImplementedError, match="top-k"):
+        exp.serving_engine(top_k=3)
+
+
+def test_zoo_engine_matches_per_query():
+    """The GSPMD feature-serving step behind the same engine: batched ==
+    per-query, greedy ids in-vocab."""
+    exp = Experiment.from_config(
+        system="zoo", arch="smollm_135m", reduced=True, batch=8, seq=32,
+        head=HeadConfig(softmax_impl="full"), log_every=0)
+    d = exp.model_cfg.d_model
+    queries = make_query_pool(exp.model_cfg.vocab_size, d, 3, seed=7)
+    eng = exp.serving_engine(max_batch=4)
+    for q in queries:
+        eng.submit(q)
+    batched = {r.rid: r for r in eng.drain()}
+    for i, q in enumerate(queries):
+        eng.submit(q)
+        (single,) = eng.drain()
+        assert np.array_equal(np.asarray(batched[i].ids),
+                              np.asarray(single.ids))
+        assert 0 <= int(single.ids) < exp.model_cfg.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# validation + bench trajectory
+# ---------------------------------------------------------------------------
+
+
+def test_serve_argument_validation(mesh8, _exp_cache):
+    exp = _paper_exp(_exp_cache, mesh8, "full", "ref")
+    with pytest.raises(ValueError, match="positive query count"):
+        exp.serve(batch=0)
+    with pytest.raises(ValueError, match="positive query count"):
+        exp.serve(batch=-3)
+    with pytest.raises(ValueError, match=r"top_k must be in \[1,"):
+        exp.serve(batch=4, top_k=0)
+    with pytest.raises(ValueError, match=str(N)):
+        exp.serve(batch=4, top_k=N + 1)
+    with pytest.raises(ValueError, match=r"top_k must be in \[1,"):
+        exp.serving_engine(top_k=10 ** 9)
+
+
+@pytest.mark.parametrize("argv", [
+    ["--batch", "0"],
+    ["--topk", "-1"],
+    ["--system", "paper", "--classes", "512", "--topk", "513"],
+    ["--cache", "-2"],
+    ["--max-wait-ms", "-1"],
+])
+def test_launcher_rejects_bad_args(argv):
+    from repro.launch import serve
+    with pytest.raises(SystemExit) as e:
+        serve.main(argv)
+    assert e.value.code == 2                   # argparse error, pre-jax
+
+
+def test_write_bench_appends_schema_records(tmp_path):
+    p1 = write_bench("t", {"a": 1}, root=str(tmp_path))
+    p2 = write_bench("t", {"a": 2}, root=str(tmp_path))
+    assert p1 == p2 == str(tmp_path / "BENCH_t.json")
+    records = json.loads((tmp_path / "BENCH_t.json").read_text())
+    assert [r["payload"]["a"] for r in records] == [1, 2]
+    assert all(r["schema"] == 1 and r["table"] == "t" and "written" in r
+               and "platform" in r for r in records)
+    (tmp_path / "BENCH_bad.json").write_text('{"not": "a list"}')
+    with pytest.raises(ValueError, match="trajectory"):
+        write_bench("bad", {}, root=str(tmp_path))
