@@ -52,7 +52,14 @@ def write_bench(name: str, payload: dict, *, root: str = None) -> str:
     records = []
     if os.path.exists(path):
         with open(path) as f:
-            records = json.load(f)
+            try:
+                records = json.load(f)
+            except json.JSONDecodeError as e:
+                # refuse to append over a half-written/garbage file, and do
+                # NOT touch it — the trajectory history is the deliverable
+                raise ValueError(
+                    f"{path} is corrupt ({e}); repair or remove it before "
+                    f"appending") from e
         if not isinstance(records, list):
             raise ValueError(
                 f"{path} is not a BENCH trajectory (expected a JSON array)")

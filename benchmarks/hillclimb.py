@@ -8,14 +8,10 @@ hypothesis -> change -> measure -> validate loop (EXPERIMENTS.md §Perf).
       --param-rules expert_mlp=data --no-fsdp-embed
   PYTHONPATH=src python -m benchmarks.hillclimb gemma_2b train_4k --knn
 """
+import argparse
+import json
 import os
-
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-
-import argparse  # noqa: E402
-import json  # noqa: E402
-import sys  # noqa: E402
+import sys
 
 
 def parse_rules(items):
@@ -32,6 +28,14 @@ def parse_rules(items):
 
 
 def main(argv=None):
+    # The 512 fake host devices are a CLI-only concern. Keep the env mutation
+    # out of module scope: pytest collection imports this module (for
+    # parse_rules), and appending to XLA_FLAGS before jax's backend
+    # initializes would silently override the test suite's 8-device setup —
+    # 512 CPU device threads on a small host deadlock collective device_get.
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
+
     p = argparse.ArgumentParser()
     p.add_argument("arch")
     p.add_argument("shape")

@@ -35,6 +35,37 @@ echo "=== paper / top-5 serve / pallas backend ==="
 python -m repro.launch.serve --devices 8 --system paper --classes 512 \
     --head full --batch 16 --topk 5 --backend pallas
 
+# resilience leg: train 4 steps, kill, resume 4 in a fresh experiment, and
+# demand bitwise equality with an uninterrupted 8-step reference run
+# (docs/resilience.md; the full per-head matrix is tests/test_resilience.py)
+echo "=== resilience / kill-and-resume (full + knn) ==="
+CKPT_TMP=$(mktemp -d)
+python - "$CKPT_TMP" <<'EOF'
+import sys
+
+from repro.api.bootstrap import ensure_host_devices
+ensure_host_devices(8)
+
+from repro.api import Experiment
+from repro.configs.base import HeadConfig
+from repro.resilience import kill_and_recover
+
+for head in ("full", "knn"):
+    def make_exp(ckpt_dir, head=head):
+        return Experiment.from_config(
+            system="paper", classes=256, feat_dim=32, batch=16,
+            head=HeadConfig(softmax_impl=head, knn_k=8, knn_kprime=16,
+                            rebuild_every=5),
+            ckpt_dir=ckpt_dir, ckpt_every=4, log_every=0)
+    rep = kill_and_recover(
+        make_exp, total_steps=8, kill_at=4,
+        ckpt_dir=f"{sys.argv[1]}/{head}", head=head,
+        fit_kw={"use_fccs_batch": False})
+    print(rep.summary())
+    assert rep.ok, rep.summary()
+EOF
+rm -rf "$CKPT_TMP"
+
 # serving tier: tiny load replays (full-softmax retrieval + a sketch head)
 # through the coalescing/caching engine; BENCH_serve.json goes to a temp
 # dir so smoke never dirties the committed perf trajectory

@@ -105,7 +105,8 @@ class PaperExperiment(Experiment):
                  feat_dim: int = 64, batch: int = 64,
                  data_fn: Optional[Callable[[int, int], dict]] = None,
                  mesh=None, lr_fn=None, ckpt_dir: Optional[str] = None,
-                 ckpt_every: int = 50, log_every: int = 10, seed: int = 0):
+                 ckpt_every: int = 50, ckpt_keep: int = 0,
+                 log_every: int = 10, seed: int = 0):
         from repro.train import hybrid
         from repro.train.trainer import PaperTrainer
 
@@ -121,7 +122,7 @@ class PaperExperiment(Experiment):
             self.model_cfg, self.head_cfg, self.train_cfg, self.mesh,
             data_fn, hw_batch=batch, lr_fn=lr_fn,
             ckpt_dir=ckpt_dir or None, ckpt_every=ckpt_every,
-            log_every=log_every, seed=seed)
+            ckpt_keep=ckpt_keep, log_every=log_every, seed=seed)
         self._serve_step = None
         self._topk_steps: dict = {}
         self._engines: dict = {}
@@ -143,8 +144,46 @@ class PaperExperiment(Experiment):
     def state(self):
         return self.trainer.state
 
-    def fit(self, steps: int, *, use_fccs_batch: bool = True):
-        return self.trainer.run(steps, use_fccs_batch=use_fccs_batch)
+    @property
+    def weights_version(self):
+        """Serving-cache invalidation probe: changes whenever the served
+        weights can have changed — on every train step AND on every
+        restore. The restore counter is what makes a rewound-then-retrained
+        run (step counter back at a previously-cached value, different
+        weights) invalidate correctly (tests/test_serving.py)."""
+        return (self.trainer.restores, int(self.trainer.state.step))
+
+    def fit(self, steps: int, *, use_fccs_batch: bool = True,
+            resume: bool = False, step_hook=None):
+        """Train. ``steps`` is the number of steps to run from the current
+        cursor; with ``resume=True`` the latest checkpoint under
+        ``ckpt_dir`` is restored first (if any) and ``steps`` becomes the
+        TOTAL step target — a killed 100-step run relaunched with
+        ``fit(100, resume=True)`` replays only the lost tail.
+        ``step_hook(t)`` fires before each step (fault injection —
+        ``repro.resilience``)."""
+        if resume:
+            self.restore(missing_ok=True)
+            steps = steps - self.trainer._t
+        if steps > 0:
+            self.trainer.run(steps, use_fccs_batch=use_fccs_batch,
+                             step_hook=step_hook)
+        return self.trainer.history
+
+    def restore(self, step: Optional[int] = None, *,
+                missing_ok: bool = False) -> Optional[int]:
+        """Restore the FULL trainer state (params, opt moments, head aux,
+        DGC buffers, data cursor) from ``ckpt_dir``. Returns the restored
+        step, or None when ``missing_ok`` and no checkpoint exists."""
+        from repro import checkpoint as ckpt
+        if not self.trainer.ckpt_dir:
+            raise ValueError("experiment has no ckpt_dir to restore from")
+        if step is None and ckpt.latest_step(self.trainer.ckpt_dir) is None:
+            if missing_ok:
+                return None
+            raise FileNotFoundError(
+                f"no checkpoints under {self.trainer.ckpt_dir}")
+        return self.trainer.restore_checkpoint(step)
 
     def evaluate(self, inputs=None, *, eval_batch: Optional[int] = None
                  ) -> float:
@@ -245,7 +284,8 @@ class ZooExperiment(Experiment):
                  head: Optional[HeadConfig] = None,
                  train: Optional[TrainConfig] = None,
                  batch: int = 64, seq: int = 64, n_model: Optional[int] = None,
-                 ckpt_dir: Optional[str] = None, log_every: int = 10,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 ckpt_keep: int = 0, log_every: int = 10,
                  seed: int = 0):
         import jax
         from jax.sharding import NamedSharding
@@ -276,9 +316,13 @@ class ZooExperiment(Experiment):
         self.train_cfg = train or TrainConfig(optimizer="sgd")
         self.batch, self.seq = batch, seq
         self.ckpt_dir = ckpt_dir or None
+        self.ckpt_every = ckpt_every
+        self.ckpt_keep = ckpt_keep
         self.log_every = log_every
         self.shape = InputShape("experiment", seq, batch, "train")
         self.history: list = []
+        self._t = 0          # data cursor: next global step fit() will take
+        self.restores = 0    # bumped on every restore (serving-cache probe)
 
         from repro.train import gspmd
         self._gspmd = gspmd
@@ -371,29 +415,132 @@ class ZooExperiment(Experiment):
                 (self.batch, cfg.enc_seq, cfg.d_model), jnp.float32)
         return inputs
 
-    def fit(self, steps: int, *, lr: float = 0.5):
+    def _ensure_opt(self):
+        """Lazy optimizer-state / train-step build (a serve-only Experiment
+        stays at params-only cost). Also the restore path's template
+        source: the snapshot structure needs ``opt_state`` to exist."""
         import jax
 
         from repro.optim import make_optimizer
+        if self.opt_state is None:
+            self.opt_state = make_optimizer(self.train_cfg).init(
+                (self.params, self.head_state.params))
+        if self._train_step is None:
+            self._train_step = jax.jit(self._gspmd.make_head_train_step(
+                self.model_cfg, self.head_cfg, self.par, self.train_cfg,
+                self.mesh, self.shape, head=self.head))
+
+    @property
+    def weights_version(self):
+        """Serving-cache invalidation probe — see
+        ``PaperExperiment.weights_version``."""
+        return (self.restores, self._t)
+
+    # -- full-state checkpoint / restore ----------------------------------
+
+    def _snapshot(self):
+        """Checkpoint pytree: model params, head-owned trainable params
+        (sketch heads' bucket weights), head aux (KNN graph / LSH tables /
+        hashes), optimizer moments, and the data cursor. Same contract as
+        the paper trainer's snapshot (docs/resilience.md)."""
+        import jax.numpy as jnp
+
+        from repro.api.heads import HeadState
+        self._ensure_opt()
+        return {
+            "model": self.params,
+            "head": self.head.state_to_save(
+                HeadState(self.head_state.params, self.head_state.aux)),
+            "opt": self.opt_state,
+            "extra": {"t": jnp.asarray(self._t, jnp.int32),
+                      "seed": jnp.asarray(0, jnp.int32)},
+        }
+
+    def save_checkpoint(self) -> str:
+        assert self.ckpt_dir, "experiment has no ckpt_dir"
+        from repro import checkpoint as ckpt
+        return ckpt.save(self.ckpt_dir, self._snapshot(), step=self._t,
+                         keep=self.ckpt_keep or None)
+
+    def restore(self, step: Optional[int] = None, *,
+                missing_ok: bool = False) -> Optional[int]:
+        """Refill model + head + optimizer state from ``ckpt_dir`` and move
+        the data cursor. Restored aux is installed as-is (NOT rebuilt): a
+        run killed mid-refresh-interval resumes with the exact graph /
+        tables the killed run was using."""
+        import jax
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro import checkpoint as ckpt
+        from repro.api.heads import HeadState
+        if not self.ckpt_dir:
+            raise ValueError("experiment has no ckpt_dir to restore from")
+        if step is None and ckpt.latest_step(self.ckpt_dir) is None:
+            if missing_ok:
+                return None
+            raise FileNotFoundError(f"no checkpoints under {self.ckpt_dir}")
+        tree, step = ckpt.restore(self.ckpt_dir, self._snapshot(), step)
+        with jax.set_mesh(self.mesh):
+            shards = self._gspmd.param_shardings(self.model_cfg, self.par,
+                                                 self.mesh)
+            self.params = jax.tree.map(jax.device_put, tree["model"], shards)
+            hs = self.head.state_from_restore(tree["head"], self.mesh,
+                                              model_axis=self._maxis)
+            self.head_state = HeadState(hs.params, hs.aux)
+            # optimizer moments mirror (model params, head params)
+            hp_sh = jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s),
+                self.head.params_spec(self._maxis)) \
+                if jax.tree.leaves(self.head_state.params) else ()
+            rep = NamedSharding(self.mesh, P())
+            moment_sh = (shards, hp_sh)
+            opt_sh = type(self.opt_state)(
+                step=rep, mu=moment_sh,
+                nu=(moment_sh if getattr(self.opt_state, "nu", None)
+                    is not None else None))
+            self.opt_state = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree["opt"], opt_sh)
+        self._t = int(tree["extra"]["t"])
+        self.restores += 1
+        # aux came from the snapshot; do NOT rebuild it before the next step
+        self._refreshed = True
+        return step
+
+    def fit(self, steps: int, *, lr: float = 0.5, resume: bool = False,
+            step_hook=None):
+        """Train ``steps`` steps from the current cursor. ``resume=True``
+        restores the latest checkpoint first (if any) and treats ``steps``
+        as the TOTAL target, like ``PaperExperiment.fit``. ``step_hook(t)``
+        is the fault-injection seam (``repro.resilience``)."""
+        import jax
+
+        if resume:
+            self.restore(missing_ok=True)
+            steps = steps - self._t
+            if steps <= 0:
+                return self.history
         if not self._refreshed:
             # heads with derived aux (KNN graph, LSH tables) rebuild it from
             # the real class weights before the first step; a no-op for the
             # rest. Done before jit so aux shapes are final.
             self.refresh_head()
-        if self._train_step is None:
-            self.opt_state = make_optimizer(self.train_cfg).init(
-                (self.params, self.head_state.params))
-            self._train_step = jax.jit(self._gspmd.make_head_train_step(
-                self.model_cfg, self.head_cfg, self.par, self.train_cfg,
-                self.mesh, self.shape, head=self.head))
+        self._ensure_opt()
         refresh_every = self.head.refresh_every
+        start = self._t
         with jax.set_mesh(self.mesh):
-            for t in range(steps):
+            for t in range(start, start + steps):
+                if step_hook is not None:
+                    step_hook(t)
                 self.params, self.head_state, self.opt_state, loss, metrics \
                     = self._train_step(self.params, self.head_state,
                                        self.opt_state, self._batch(t), lr)
+                self._t = t + 1
                 if refresh_every and (t + 1) % refresh_every == 0:
                     self.refresh_head()
+                if self.ckpt_dir and self.ckpt_every and \
+                        (t + 1) % self.ckpt_every == 0:
+                    self.save_checkpoint()
                 row = {"step": t, "loss": float(loss),
                        "acc": float(metrics["accuracy"])}
                 self.history.append(row)
@@ -401,13 +548,9 @@ class ZooExperiment(Experiment):
                     print(f"[zoo] step={t} loss={row['loss']:.4f} "
                           f"acc={row['acc']:.3f}")
         if self.ckpt_dir:
-            from repro import checkpoint as ckpt
-            # sketch heads train their own bucket weights — they must be
-            # part of the checkpoint or the output layer is lost
-            payload = (self.params if self.head.params_are_class_weights
-                       else {"model": self.params,
-                             "head": self.head_state.params})
-            ckpt.save(self.ckpt_dir, payload, step=len(self.history))
+            # end-of-fit snapshot: full state (bucket weights included —
+            # sketch heads' output layer must not be lost), resumable
+            self.save_checkpoint()
             print(f"[zoo] checkpoint written to {self.ckpt_dir}")
         return self.history
 

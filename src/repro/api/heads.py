@@ -116,6 +116,30 @@ class SoftmaxHead:
     def metrics_spec(self) -> dict:
         return {"accuracy": P(), "logz": P()}
 
+    # -- checkpoint contract ----------------------------------------------
+    def state_to_save(self, state: HeadState):
+        """Full-state snapshot pytree for the checkpoint layer: the head's
+        trainable params AND its aux (KNN graph, LSH tables, CMS hashes /
+        bucket weights). Aux is saved, not rebuilt, so a restore resumes
+        mid-refresh-interval with the exact tables the killed run was
+        using (docs/resilience.md)."""
+        return {"params": state.params, "aux": state.aux}
+
+    def state_from_restore(self, tree, mesh, *, model_axis) -> HeadState:
+        """Re-place a restored ``state_to_save`` snapshot on ``mesh`` with
+        the head's own PartitionSpecs. Shapes may differ from a fresh
+        ``init`` (a refreshed KNN graph is denser than the warm-start
+        self-graph); only the tree structure must match."""
+        def put(subtree, spec):
+            if not jax.tree.leaves(subtree):   # e.g. () params on the zoo
+                return subtree
+            return jax.tree.map(
+                lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+                subtree, spec)
+        params = put(tree["params"], self.params_spec(model_axis))
+        aux = put(tree["aux"], self.aux_spec(model_axis))
+        return HeadState(params=params, aux=aux)
+
     # -- periodic work ----------------------------------------------------
     @property
     def refresh_every(self) -> int:

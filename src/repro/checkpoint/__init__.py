@@ -1,3 +1,4 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save
+from repro.checkpoint.checkpoint import (all_steps, latest_step, prune,
+                                         restore, save)
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "all_steps", "prune"]

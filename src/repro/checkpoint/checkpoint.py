@@ -59,8 +59,16 @@ def _key_str(path) -> str:
     return "/".join(parts)
 
 
-def save(path: str, tree: Any, step: int = 0) -> str:
-    """Write ``<path>/ckpt_<step>.msgpack.zst``. Returns the file path."""
+def save(path: str, tree: Any, step: int = 0,
+         keep: Optional[int] = None) -> str:
+    """Write ``<path>/ckpt_<step>.msgpack.zst``. Returns the file path.
+
+    The write is atomic (tmp file + ``os.replace``): a run killed mid-write
+    never leaves a truncated checkpoint behind for ``latest_step`` to find.
+    ``keep=N`` prunes all but the N highest-step files AFTER the new file is
+    durable (oldest steps first — a long-run cadence must not fill the
+    disk); ``keep=None``/0 retains everything.
+    """
     os.makedirs(path, exist_ok=True)
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     payload = {"step": step, "leaves": {}}
@@ -71,17 +79,41 @@ def save(path: str, tree: Any, step: int = 0) -> str:
             "data": arr.tobytes()}
     raw = msgpack.packb(payload, use_bin_type=True)
     fname = os.path.join(path, f"ckpt_{step}.msgpack.zst")
-    with open(fname, "wb") as f:
-        f.write(_compress(raw))
+    tmp = fname + f".tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(_compress(raw))
+        os.replace(tmp, fname)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    if keep:
+        prune(path, keep)
     return fname
 
 
-def latest_step(path: str) -> Optional[int]:
+def all_steps(path: str) -> list:
+    """Sorted step numbers of every checkpoint under ``path``."""
     if not os.path.isdir(path):
-        return None
-    steps = [int(m.group(1)) for fn in os.listdir(path)
-             if (m := re.match(r"ckpt_(\d+)\.msgpack\.zst$", fn))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for fn in os.listdir(path)
+                  if (m := re.match(r"ckpt_(\d+)\.msgpack\.zst$", fn)))
+
+
+def prune(path: str, keep: int) -> list:
+    """Delete all but the ``keep`` highest-step checkpoint files. Returns
+    the pruned step numbers (ascending — oldest removed first)."""
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    doomed = all_steps(path)[:-keep] if keep else []
+    for s in doomed:
+        os.remove(os.path.join(path, f"ckpt_{s}.msgpack.zst"))
+    return doomed
+
+
+def latest_step(path: str) -> Optional[int]:
+    steps = all_steps(path)
+    return steps[-1] if steps else None
 
 
 def restore(path: str, target: Any, step: Optional[int] = None):

@@ -161,6 +161,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # jax <= 0.4.x wraps the dict in a 1-list
+        cost = cost[0] if cost else {}
     hlo = hlo_analyze(compiled.as_text())  # loop-aware (see roofline/hlo.py)
     coll = hlo.collectives
     n_params = sum(l.size for l in jax.tree.leaves(params_sds))

@@ -54,7 +54,19 @@ def parse_args(argv=None):
     p.add_argument("--lr", type=float, default=2.0)
     p.add_argument("--optimizer", default="sgd")
     p.add_argument("--ckpt-dir", default="")
-    return p.parse_args(argv)
+    p.add_argument("--ckpt-every", type=int, default=50,
+                   help="full-state snapshot cadence (steps); both systems")
+    p.add_argument("--ckpt-keep", type=int, default=0,
+                   help="retain only the N newest checkpoints (0 = all)")
+    p.add_argument("--resume", action="store_true",
+                   help="restore the latest checkpoint under --ckpt-dir and "
+                        "run only the remaining steps (--steps is the TOTAL)")
+    args = p.parse_args(argv)
+    if args.resume and not args.ckpt_dir:
+        p.error("--resume requires --ckpt-dir")
+    if args.ckpt_keep < 0 or args.ckpt_every < 0:
+        p.error("--ckpt-keep/--ckpt-every must be >= 0")
+    return args
 
 
 def main(argv=None):
@@ -84,8 +96,9 @@ def main(argv=None):
         exp = Experiment.from_config(
             system="paper", trunk=args.trunk, classes=args.classes,
             feat_dim=args.feat_dim, batch=args.batch, head=hcfg, train=tcfg,
-            ckpt_dir=args.ckpt_dir or None, ckpt_every=50)
-        exp.fit(args.steps, use_fccs_batch=args.fccs)
+            ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
+            ckpt_keep=args.ckpt_keep)
+        exp.fit(args.steps, use_fccs_batch=args.fccs, resume=args.resume)
         acc = exp.evaluate(eval_batch=args.batch * 4)
         print(f"[train] final eval accuracy: {acc:.4f}")
         return 0
@@ -97,8 +110,9 @@ def main(argv=None):
         head=HeadConfig(softmax_impl=impl, backend=args.backend, knn_k=16,
                         knn_kprime=32, active_frac=0.1, rebuild_every=100),
         train=TrainConfig(optimizer=args.optimizer),
-        ckpt_dir=args.ckpt_dir or None)
-    exp.fit(args.steps, lr=args.lr)
+        ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
+        ckpt_keep=args.ckpt_keep)
+    exp.fit(args.steps, lr=args.lr, resume=args.resume)
     acc = exp.evaluate()
     print(f"[zoo] final next-token accuracy: {acc:.4f}")
     return 0

@@ -1,0 +1,62 @@
+"""Fault injection for the training loop (AIOpsLab-style scenarios).
+
+A 5-day run on a 256-GPU cluster (the paper's setting) gets preempted,
+loses hosts, and stalls on stragglers. The trainers expose a ``step_hook``
+seam — called with the global step index immediately before that step
+runs — and this module provides the faults to plug into it:
+
+  * **kill** — raise ``SimulatedFault`` before step ``kill_at``: the
+    training process dies mid-run with whatever checkpoints it has already
+    written. Recovery = a FRESH trainer (process-simulated: new
+    ``Experiment``, new jit caches, re-initialized params) restoring the
+    latest full-state snapshot and re-running the lost steps.
+  * **delay** — sleep ``delay_s`` before step ``delay_at``: a straggler /
+    slow-host fault. Numerics must be unaffected (the step stream is
+    synchronous); what it costs is wall-clock, which the harness reports.
+
+Where the kill lands is the scenario catalogue: mid-epoch (between
+checkpoints — work since the last snapshot is lost and replayed),
+mid-refresh-interval (the KNN graph / LSH tables in the snapshot are
+*stale relative to the params* exactly as they were in the killed run —
+restore must NOT rebuild them or the resumed trajectory diverges), and
+post-DGC-accumulation (error-feedback residuals u/v are mid-flight and
+must ride the snapshot).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+
+class SimulatedFault(RuntimeError):
+    """An injected process death. Escapes the training loop like a real
+    SIGKILL would — nothing downstream of the loop runs."""
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """When to hurt the run. ``kill_at``/``delay_at`` are global step
+    indices (the value the trainer's ``step_hook`` receives)."""
+    kill_at: Optional[int] = None
+    delay_at: Optional[int] = None
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        if self.kill_at is None and self.delay_at is None:
+            raise ValueError("FaultPlan with neither kill_at nor delay_at "
+                             "injects nothing")
+        if self.delay_at is not None and self.delay_s < 0:
+            raise ValueError(f"delay_s must be >= 0, got {self.delay_s}")
+
+
+def fault_hook(plan: FaultPlan,
+               sleep: Callable[[float], None] = time.sleep):
+    """A ``step_hook`` implementing ``plan``. ``sleep`` is injectable so
+    tests can count delay faults without real wall-clock."""
+    def hook(t: int):
+        if plan.delay_at is not None and t == plan.delay_at:
+            sleep(plan.delay_s)
+        if plan.kill_at is not None and t == plan.kill_at:
+            raise SimulatedFault(f"injected kill before step {t}")
+    return hook

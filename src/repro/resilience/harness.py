@@ -1,0 +1,184 @@
+"""Kill-and-recover harness: inject a fault, restore, prove equivalence.
+
+The contract under test (docs/resilience.md): a run killed at step ``k``
+and resumed by a FRESH trainer from its latest full-state checkpoint must
+be *equivalent* to a never-interrupted reference run —
+
+  * ``"bitwise"`` — every leaf of the final full-state snapshot (FE
+    params, head params, head aux, optimizer moments, DGC buffers) is
+    byte-identical, and the per-step loss rows match exactly. This is the
+    deterministic-path guarantee: the synthetic data stream, FCCS
+    schedule, and per-step sampling are all pure functions of the saved
+    cursor, and XLA CPU reductions are run-to-run deterministic.
+  * ``"trajectory"`` — the resumed loss trajectory matches the reference
+    to a tolerance (for paths with documented nondeterminism).
+
+``kill_and_recover`` runs all three legs (reference, victim, resume) from
+one experiment factory and returns a ``RecoveryReport`` with the
+equivalence verdict plus the recovery metrics ROADMAP asks for: steps of
+work lost (replayed), and restore wall-clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.resilience.faults import FaultPlan, SimulatedFault, fault_hook
+
+
+# ---------------------------------------------------------------------------
+# tree comparison
+# ---------------------------------------------------------------------------
+
+
+def tree_compare(a, b) -> dict:
+    """Leaf-by-leaf comparison of two snapshot pytrees.
+
+    Returns {"bitwise": bool, "max_abs_diff": float, "mismatches": [path]}.
+    Bitwise means same dtype, same shape, same bytes — the strongest
+    equivalence a restore can claim. ``max_abs_diff`` is over float leaves
+    only (int leaves — graph indices, hash tables — either match or are
+    listed as mismatches).
+    """
+    import jax
+
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    assert len(fa) == len(fb), "snapshot structures differ"
+    mismatches, max_diff = [], 0.0
+    for (pa, la), (pb, lb) in zip(fa, fb):
+        x = np.asarray(jax.device_get(la))
+        y = np.asarray(jax.device_get(lb))
+        if x.dtype != y.dtype or x.shape != y.shape \
+                or x.tobytes() != y.tobytes():
+            mismatches.append(jax.tree_util.keystr(pa))
+            if (x.shape == y.shape
+                    and np.issubdtype(x.dtype, np.floating)):
+                d = np.max(np.abs(x.astype(np.float64)
+                                  - y.astype(np.float64)))
+                max_diff = max(max_diff, float(d))
+            else:
+                max_diff = float("inf")
+    return {"bitwise": not mismatches, "max_abs_diff": max_diff,
+            "mismatches": mismatches}
+
+
+def _snapshot_of(exp):
+    """The experiment's full-state checkpoint tree (both systems)."""
+    if hasattr(exp, "trainer"):            # paper system
+        return exp.trainer._snapshot()
+    return exp._snapshot()                 # zoo system
+
+
+def _cursor_of(exp) -> int:
+    return exp.trainer._t if hasattr(exp, "trainer") else exp._t
+
+
+def _history_of(exp) -> list:
+    return exp.trainer.history if hasattr(exp, "trainer") else exp.history
+
+
+# ---------------------------------------------------------------------------
+# the harness
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RecoveryReport:
+    head: str
+    equivalence: str                  # asserted class: bitwise | trajectory
+    kill_at: int
+    restored_step: int
+    steps_replayed: int               # work lost to the fault (k - restore)
+    recovery_s: float                 # fresh-trainer restore wall-clock
+    bitwise: bool                     # final snapshots byte-identical
+    max_abs_diff: float
+    mismatches: list = field(default_factory=list)
+    loss_max_rel: float = 0.0         # resumed-vs-reference loss rows
+    resumed_history: list = field(default_factory=list)
+    reference_history: list = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        if self.equivalence == "bitwise":
+            return self.bitwise and self.loss_max_rel == 0.0
+        return self.loss_max_rel < 1e-4
+
+    def summary(self) -> str:
+        return (f"[{self.head}] kill@{self.kill_at} -> restore@"
+                f"{self.restored_step} (+{self.steps_replayed} replayed, "
+                f"{self.recovery_s * 1e3:.0f} ms restore) "
+                f"{self.equivalence}: "
+                f"{'OK' if self.ok else 'DIVERGED ' + str(self.mismatches)}")
+
+
+def _loss_divergence(resumed: list, reference: list) -> float:
+    """Max relative loss gap over the steps both histories cover. The
+    victim's pre-kill rows live in ITS history, not the resumed trainer's,
+    so compare on step index."""
+    ref = {r["step"]: r["loss"] for r in reference}
+    worst = 0.0
+    for row in resumed:
+        if row["step"] in ref:
+            a, b = row["loss"], ref[row["step"]]
+            worst = max(worst, abs(a - b) / max(abs(b), 1e-12))
+    return worst
+
+
+def kill_and_recover(make_exp: Callable[[Optional[str]], object], *,
+                     total_steps: int, kill_at: int, ckpt_dir: str,
+                     equivalence: str = "bitwise", head: str = "?",
+                     fit_kw: Optional[dict] = None,
+                     plan: Optional[FaultPlan] = None) -> RecoveryReport:
+    """Run the full scenario and report.
+
+    ``make_exp(ckpt_dir)`` must build a FRESH experiment (new params, new
+    jit caches) writing checkpoints under ``ckpt_dir`` when it is not
+    None — each call simulates a separate process. ``fit_kw`` is passed to
+    every ``fit`` call (e.g. ``{"lr": 0.5}`` for the zoo,
+    ``{"use_fccs_batch": True}`` for the paper system).
+    """
+    if equivalence not in ("bitwise", "trajectory"):
+        raise ValueError(f"unknown equivalence class {equivalence!r}")
+    if not 0 < kill_at < total_steps:
+        raise ValueError(f"kill_at must be inside (0, {total_steps}), "
+                         f"got {kill_at}")
+    fit_kw = dict(fit_kw or {})
+    plan = plan or FaultPlan(kill_at=kill_at)
+
+    # 1. uninterrupted reference
+    ref = make_exp(None)
+    ref.fit(total_steps, **fit_kw)
+
+    # 2. victim: same config, checkpointing, killed mid-run
+    victim = make_exp(ckpt_dir)
+    try:
+        victim.fit(total_steps, step_hook=fault_hook(plan), **fit_kw)
+        raise AssertionError(
+            f"fault plan {plan} never fired in {total_steps} steps")
+    except SimulatedFault:
+        pass
+
+    # 3. fresh process-simulated trainer restores and replays to the end
+    t0 = time.perf_counter()
+    resumed = make_exp(ckpt_dir)
+    restored_step = resumed.restore()
+    recovery_s = time.perf_counter() - t0
+    remaining = total_steps - _cursor_of(resumed)
+    if remaining > 0:
+        resumed.fit(remaining, **fit_kw)
+
+    cmp = tree_compare(_snapshot_of(resumed), _snapshot_of(ref))
+    return RecoveryReport(
+        head=head, equivalence=equivalence, kill_at=kill_at,
+        restored_step=restored_step,
+        steps_replayed=kill_at - restored_step, recovery_s=recovery_s,
+        bitwise=cmp["bitwise"], max_abs_diff=cmp["max_abs_diff"],
+        mismatches=cmp["mismatches"],
+        loss_max_rel=_loss_divergence(_history_of(resumed),
+                                      _history_of(ref)),
+        resumed_history=list(_history_of(resumed)),
+        reference_history=list(_history_of(ref)))

@@ -218,13 +218,17 @@ class ServingEngine:
         ``top_k=k`` serves ``(ids [k], scores [k])`` per request."""
         if hasattr(exp, "trainer"):                     # paper system
             step_fn = _paper_step_fn(exp, top_k, donate)
-            version_fn = lambda: int(exp.state.step)    # noqa: E731
         elif hasattr(exp, "par"):                       # zoo system
             step_fn = _zoo_step_fn(exp, top_k, donate)
-            version_fn = lambda: len(exp.history)       # noqa: E731
         else:
             raise TypeError(
                 f"not a paper/zoo Experiment: {type(exp).__name__}")
+        # the probe must move on every restore as well as every train step:
+        # a checkpoint restore REWINDS the step counter, and a rewound run
+        # retrained to a previously-cached step value has different weights
+        # — a bare step probe would serve those stale scores. Experiment's
+        # ``weights_version`` is (restore count, step) for exactly this.
+        version_fn = lambda: exp.weights_version        # noqa: E731
         return ServingEngine(step_fn, top_k=top_k, max_batch=max_batch,
                              max_wait_ms=max_wait_ms, cache=cache,
                              clock=clock, version_fn=version_fn,

@@ -9,6 +9,15 @@ and eval.
 The softmax head is whatever ``head_cfg.softmax_impl`` names in the
 ``repro.api`` registry; the trainer never branches on the head kind — it
 only honors the head's ``refresh_every`` cadence.
+
+Checkpoints are FULL-state snapshots (docs/resilience.md): FE params, head
+params AND head aux (KNN graph / LSH tables / sketch hashes), optimizer
+moments, DGC error-feedback buffers, and the data cursor / step counter —
+everything a killed run needs for ``restore_checkpoint`` to continue
+step-for-step equivalent to an uninterrupted run. The FCCS schedule and
+the synthetic data stream are pure functions of the cursor, so saving the
+cursor IS saving the schedule state. ``run`` resumes from the cursor, and
+``step_hook`` is the fault-injection seam (``repro.resilience``).
 """
 from __future__ import annotations
 
@@ -17,11 +26,13 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro import checkpoint as ckpt_lib
-from repro.api.heads import make_head
+from repro.api.heads import HeadState, make_head
 from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
 from repro.core import fccs
+from repro.core import sparsify as sp
 from repro.train import hybrid
 
 
@@ -45,6 +56,7 @@ class PaperTrainer:
     lr_fn: Optional[Callable[[int], float]] = None  # default: FCCS policy
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
+    ckpt_keep: int = 0                      # 0 = retain every checkpoint
     log_every: int = 10
     seed: int = 0
     history: list = field(default_factory=list)
@@ -61,6 +73,8 @@ class PaperTrainer:
             jax.random.PRNGKey(self.seed), self.model_cfg, self.head_cfg,
             self.train_cfg, n_dev, head=self.head)
         self._steps = {}
+        self._t = 0          # data cursor: next step index run() will take
+        self.restores = 0    # bumped on every restore (serving-cache probe)
         # initial refresh: heads with derived aux state (KNN graph, LSH
         # tables) build it from the freshly-initialized weights; a no-op
         # for heads without periodic work.
@@ -87,11 +101,80 @@ class PaperTrainer:
     # back-compat name (pre-registry API)
     rebuild_graph = refresh_head
 
-    def run(self, total_steps: int, *, use_fccs_batch: bool = True):
+    # -- full-state checkpoint / restore ----------------------------------
+
+    def _snapshot(self):
+        """The checkpoint pytree: EVERYTHING the step function consumes,
+        plus the cursor the outer loop consumes. Same structure every
+        save, so any snapshot restores into any fresh trainer of the same
+        config (leaf shapes may differ — the checkpoint stores them)."""
+        st = self.state
+        tree = {
+            "fe": st.fe_params,
+            "head": self.head.state_to_save(
+                HeadState(st.head_params, st.head_aux)),
+            "opt": st.opt_state,
+            "extra": {"t": jnp.asarray(self._t, jnp.int32),
+                      "step": jnp.asarray(st.step, jnp.int32),
+                      "seed": jnp.asarray(self.seed, jnp.int32)},
+        }
+        if st.dgc is not None:
+            tree["dgc"] = {"u": st.dgc.u, "v": st.dgc.v}
+        return tree
+
+    def save_checkpoint(self) -> str:
+        """Atomic full-state snapshot at the current cursor."""
+        assert self.ckpt_dir, "trainer has no ckpt_dir"
+        return ckpt_lib.save(self.ckpt_dir, self._snapshot(), step=self._t,
+                             keep=self.ckpt_keep or None)
+
+    def restore_checkpoint(self, step: Optional[int] = None) -> int:
+        """Refill the FULL trainer state from ``ckpt_dir`` (latest step by
+        default) and move the data cursor so the next ``run`` continues the
+        killed run step-for-step. Returns the restored step."""
+        assert self.ckpt_dir, "trainer has no ckpt_dir"
+        from jax.sharding import NamedSharding
+
+        tree, step = ckpt_lib.restore(self.ckpt_dir, self._snapshot(), step)
+        specs = hybrid.state_specs(self.state, self.head)
+        mesh = self.mesh
+
+        def put(subtree, spec_tree):
+            return jax.tree.map(
+                lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+                subtree, spec_tree)
+
+        fe = put(tree["fe"], specs.fe_params)
+        hs = self.head.state_from_restore(tree["head"], mesh,
+                                          model_axis=hybrid.AXIS)
+        opt = put(tree["opt"], specs.opt_state)
+        dgc = None
+        if self.state.dgc is not None:
+            dgc = sp.DGCState(u=put(tree["dgc"]["u"], specs.dgc.u),
+                              v=put(tree["dgc"]["v"], specs.dgc.v))
+        self.state = hybrid.HybridState(
+            fe, hs.params, hs.aux, opt, dgc,
+            jnp.asarray(tree["extra"]["step"], jnp.int32))
+        self._t = int(tree["extra"]["t"])
+        self.restores += 1
+        return step
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self, total_steps: int, *, use_fccs_batch: bool = True,
+            step_hook: Optional[Callable[[int], None]] = None):
+        """Run ``total_steps`` MORE steps from the current cursor (0 for a
+        fresh trainer; the restored step after ``restore_checkpoint``).
+        ``step_hook(t)`` fires before each step — the fault-injection seam
+        (``repro.resilience.faults``); whatever it raises propagates after
+        any due checkpoint of the previous step was already written."""
         fcfg = self.train_cfg.fccs
         refresh_every = self.head.refresh_every
+        start = self._t
         with jax.set_mesh(self.mesh):
-            for t in range(total_steps):
+            for t in range(start, start + total_steps):
+                if step_hook is not None:
+                    step_hook(t)
                 lr = (self.lr_fn(t) if self.lr_fn is not None
                       else fccs.learning_rate(t, fcfg))
                 n = (_pow2_quantize(fccs.accum_steps(t, fcfg, self.hw_batch))
@@ -99,14 +182,12 @@ class PaperTrainer:
                 inputs = self.data_fn(t, self.hw_batch * n)
                 step = self._get_step(n)
                 self.state, loss, metrics = step(self.state, inputs, lr)
+                self._t = t + 1
                 if refresh_every and (t + 1) % refresh_every == 0:
                     self.refresh_head()
                 if self.ckpt_dir and self.ckpt_every and \
                         (t + 1) % self.ckpt_every == 0:
-                    ckpt_lib.save(self.ckpt_dir,
-                                  {"fe": self.state.fe_params,
-                                   "head": self.state.head_params},
-                                  step=t + 1)
+                    self.save_checkpoint()
                 row = {"step": t, "lr": lr, "batch": self.hw_batch * n,
                        "loss": float(loss),
                        "acc": float(metrics["accuracy"])}

@@ -1,0 +1,68 @@
+"""``benchmarks.common.write_bench`` trajectory-file I/O contract.
+
+The BENCH_<table>.json files at the repo root are append-only trajectories:
+every PR's speed/accuracy claim appends one schema-versioned record.
+These tests pin the parts a future schema bump or a crashed run could
+silently break: old records survive appends verbatim, corrupt files are
+refused WITHOUT being clobbered, and the trajectories already committed
+in-repo keep parsing under the current schema.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks.common import BENCH_SCHEMA, REPO_ROOT, write_bench
+
+
+def test_schema_bump_keeps_legacy_records_verbatim(tmp_path):
+    """A trajectory started under an older schema still accepts appends;
+    the legacy record is byte-preserved and only NEW records carry the
+    current schema version (readers dispatch per record, not per file)."""
+    legacy = {"schema": 0, "table": "t", "payload": {"old_metric": 3.5}}
+    (tmp_path / "BENCH_t.json").write_text(json.dumps([legacy]))
+    write_bench("t", {"new_metric": 1.0}, root=str(tmp_path))
+    records = json.loads((tmp_path / "BENCH_t.json").read_text())
+    assert records[0] == legacy                    # untouched, un-upgraded
+    assert records[1]["schema"] == BENCH_SCHEMA
+    assert records[1]["payload"] == {"new_metric": 1.0}
+    # and appending again under the current schema keeps both
+    write_bench("t", {"new_metric": 2.0}, root=str(tmp_path))
+    records = json.loads((tmp_path / "BENCH_t.json").read_text())
+    assert [r.get("schema") for r in records] == [0, BENCH_SCHEMA,
+                                                  BENCH_SCHEMA]
+
+
+def test_append_to_corrupt_file_raises_and_preserves_it(tmp_path):
+    """A half-written file (crashed run) must fail the append with a clear
+    error AND survive byte-for-byte — the history is the deliverable."""
+    p = tmp_path / "BENCH_x.json"
+    p.write_text('[{"schema": 1, "truncated": ')
+    before = p.read_text()
+    with pytest.raises(ValueError, match="corrupt"):
+        write_bench("x", {"a": 1}, root=str(tmp_path))
+    assert p.read_text() == before
+
+
+def test_append_to_non_array_raises_and_preserves_it(tmp_path):
+    p = tmp_path / "BENCH_y.json"
+    p.write_text('{"not": "a list"}')
+    with pytest.raises(ValueError, match="trajectory"):
+        write_bench("y", {}, root=str(tmp_path))
+    assert json.loads(p.read_text()) == {"not": "a list"}
+
+
+@pytest.mark.parametrize("fname", ["BENCH_serve.json", "BENCH_table3.json"])
+def test_in_repo_trajectories_parse_under_current_schema(fname):
+    """The trajectories committed by earlier PRs must stay readable: a
+    JSON array of records whose schema is at most the current version,
+    each carrying the keys the hillclimb tooling keys on."""
+    path = os.path.join(REPO_ROOT, fname)
+    records = json.loads(open(path).read())
+    assert isinstance(records, list) and records
+    table = fname[len("BENCH_"):-len(".json")]
+    for r in records:
+        assert r["table"] == table
+        assert 0 <= r["schema"] <= BENCH_SCHEMA
+        assert isinstance(r["payload"], dict) and r["payload"]
+        assert "written" in r and "platform" in r and "n_devices" in r

@@ -192,3 +192,74 @@ def test_ssd_chunked_equals_naive(s, chunk, seed):
     y2, st2 = _ssd_naive(x, dt, A, B, C)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
     np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint save -> restore is the identity on arbitrary nested pytrees
+# ---------------------------------------------------------------------------
+
+
+class _OptLike(__import__("typing").NamedTuple):
+    """NamedTuple node, like the real optimizer state."""
+    step: object
+    mu: object
+    nu: object
+
+
+_DTYPES = [np.float32, np.float16, np.int32, np.int8, np.uint8, np.bool_]
+
+
+def _np_leaf(draw):
+    dtype = draw(st.sampled_from(_DTYPES))
+    shape = tuple(draw(st.lists(st.integers(0, 4), min_size=0, max_size=3)))
+    rng = np.random.default_rng(draw(st.integers(0, 2**16)))
+    if dtype == np.bool_:
+        return rng.integers(0, 2, size=shape).astype(np.bool_)
+    if np.issubdtype(dtype, np.integer):
+        info = np.iinfo(dtype)
+        return rng.integers(info.min, int(info.max) + 1,
+                            size=shape).astype(dtype)
+    return rng.standard_normal(size=shape).astype(dtype)
+
+
+@st.composite
+def _pytrees(draw, depth=3):
+    """Arbitrary nested dict/tuple/list/NamedTuple pytrees with mixed-dtype
+    (and possibly empty / zero-length) array leaves."""
+    if depth == 0 or draw(st.booleans()):
+        return _np_leaf(draw)
+    kind = draw(st.sampled_from(["dict", "tuple", "list", "ntuple"]))
+    n = draw(st.integers(1, 3))
+    kids = [draw(_pytrees(depth=depth - 1)) for _ in range(n)]
+    if kind == "dict":
+        return {f"k{i}": c for i, c in enumerate(kids)}
+    if kind == "tuple":
+        return tuple(kids)
+    if kind == "list":
+        return list(kids)
+    while len(kids) < 3:
+        kids.append(_np_leaf(draw))
+    return _OptLike(*kids[:3])
+
+
+@settings(max_examples=25, deadline=None)
+@given(tree=_pytrees(), step=st.integers(0, 10**6))
+def test_checkpoint_roundtrip_identity(tree, step):
+    import shutil
+    import tempfile
+
+    from repro import checkpoint as ckpt_lib
+    d = tempfile.mkdtemp(prefix="ckpt_prop_")
+    try:
+        ckpt_lib.save(d, tree, step=step)
+        out, got_step = ckpt_lib.restore(d, tree, step)
+        assert got_step == step
+        fa = jax.tree_util.tree_flatten_with_path(tree)
+        fb = jax.tree_util.tree_flatten_with_path(out)
+        assert fa[1] == fb[1], "tree structure changed"
+        for (pa, a), (_, b) in zip(fa[0], fb[0]):
+            a, b = np.asarray(a), np.asarray(jax.device_get(b))
+            assert a.dtype == b.dtype and a.shape == b.shape, pa
+            assert a.tobytes() == b.tobytes(), pa
+    finally:
+        shutil.rmtree(d, ignore_errors=True)

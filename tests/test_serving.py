@@ -249,6 +249,37 @@ def test_engine_cache_hits_and_version_invalidation():
     assert eng.cache.stats()["invalidations"] == 1
 
 
+def test_cache_invalidated_after_restore_rewind(mesh8, tmp_path):
+    """A checkpoint restore REWINDS the step counter; retraining back to a
+    previously-cached step value yields different-version weights at the
+    SAME step. A bare step probe cannot see that — ``weights_version`` is
+    (restore count, step) precisely so the cache invalidates here."""
+    exp = Experiment.from_config(
+        system="paper", classes=N, feat_dim=D, batch=8, mesh=mesh8,
+        head=_head_cfg("full"), log_every=0,
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=1)
+    exp.fit(2, use_fccs_batch=False)
+    cache = ScoreCache(64)
+    eng = exp.serving_engine(top_k=3, cache=cache)
+    q = make_query_pool(N, D, 1, seed=3)[0]
+    eng.submit(q)
+    eng.drain()
+    eng.submit(q)
+    (hit,) = eng.drain()
+    assert hit.cached
+
+    v0 = exp.weights_version
+    exp.restore(step=1)
+    exp.fit(1, use_fccs_batch=False)           # back at step 2
+    # same step counter as when the score was cached, different version
+    assert exp.weights_version[1] == v0[1]
+    assert exp.weights_version != v0
+    eng.submit(q)
+    (fresh,) = eng.drain()
+    assert not fresh.cached
+    assert cache.stats()["invalidations"] == 1
+
+
 def test_replay_trace_flushes_lull_tails_at_their_deadline():
     """A query arriving right before a long lull must be flushed at its
     max-wait deadline, not at the next arrival."""
