@@ -17,12 +17,32 @@ from __future__ import annotations
 import datetime
 import json
 import os
+import subprocess
 import time
 
 import jax
 
 BENCH_SCHEMA = 1
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def git_rev(root: str = None) -> str:
+    """Short git SHA of the tree the benchmark ran in, with a ``-dirty``
+    suffix when the working tree is modified; ``"unknown"`` outside a git
+    checkout. Stamped onto every BENCH record for traceability."""
+    cwd = root or REPO_ROOT
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=cwd,
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+        porcelain = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=cwd,
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+        return f"{rev}-dirty" if porcelain else rev
+    except Exception:
+        return "unknown"
 
 
 def timeit(fn, *args, n: int = 20, warmup: int = 3):
@@ -68,6 +88,7 @@ def write_bench(name: str, payload: dict, *, root: str = None) -> str:
         "table": name,
         "written": datetime.datetime.now(datetime.timezone.utc)
                    .isoformat(timespec="seconds"),
+        "git_rev": git_rev(),
         "jax": jax.__version__,
         "platform": jax.devices()[0].platform,
         "n_devices": len(jax.devices()),
@@ -77,3 +98,71 @@ def write_bench(name: str, payload: dict, *, root: str = None) -> str:
         json.dump(records, f, indent=1, sort_keys=True)
         f.write("\n")
     return path
+
+
+# ---------------------------------------------------------------------------
+# regression gate (benchmarks/run.py --check)
+# ---------------------------------------------------------------------------
+
+
+def _dig(record: dict, dotted: str):
+    """Fetch a dotted path ("payload.uncached.p99_ms") out of a record;
+    None when any hop is missing."""
+    cur = record
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def comparable(prev: dict, new: dict) -> bool:
+    """Records are comparable when they measured the same thing on the
+    same environment: platform, device count, quick flag, and the
+    benchmark's own config block (when it records one) all match."""
+    for key in ("platform", "n_devices"):
+        if prev.get(key) != new.get(key):
+            return False
+    for key in ("quick", "config"):
+        if _dig(prev, f"payload.{key}") != _dig(new, f"payload.{key}"):
+            return False
+    return True
+
+
+def check_regression(prev: dict, new: dict, metrics: dict, *,
+                     threshold: float = 0.25) -> list:
+    """Compare a fresh record against a committed baseline.
+
+    ``metrics`` maps dotted payload paths to a direction: "lower" = the
+    metric is a cost (regression when it grows), "higher" = the metric is
+    a score (regression when it shrinks). A trailing ".*" expands over
+    the keys of the dict at that path (present in BOTH records). Returns
+    a list of human-readable failure strings (empty = no regression
+    beyond ``threshold``); non-numeric, missing, or <= 0 baselines are
+    skipped — absent legs must not fail the gate."""
+    failures = []
+    expanded = {}
+    for path, direction in metrics.items():
+        if path.endswith(".*"):
+            base = path[:-2]
+            pd, nd = _dig(prev, f"payload.{base}"), _dig(new,
+                                                         f"payload.{base}")
+            if isinstance(pd, dict) and isinstance(nd, dict):
+                for k in pd.keys() & nd.keys():
+                    expanded[f"{base}.{k}"] = direction
+        else:
+            expanded[path] = direction
+    for path, direction in expanded.items():
+        pv, nv = _dig(prev, f"payload.{path}"), _dig(new, f"payload.{path}")
+        if not isinstance(pv, (int, float)) or not isinstance(nv,
+                                                              (int, float)):
+            continue
+        if isinstance(pv, bool) or isinstance(nv, bool) or pv <= 0:
+            continue
+        delta = (nv - pv) / pv if direction == "lower" else (pv - nv) / pv
+        if delta > threshold:
+            failures.append(
+                f"{path}: {pv:.6g} -> {nv:.6g} "
+                f"({'+' if nv >= pv else '-'}{abs(nv - pv) / pv:.0%}, "
+                f"{direction} is better, threshold {threshold:.0%})")
+    return failures

@@ -2,10 +2,69 @@
 ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src:. python -m benchmarks.run [--quick] [--only tableN]
+      [--check] [--check-threshold 0.25]
+
+``--check`` turns the trajectory files into a regression gate: after each
+table runs, its freshly appended ``BENCH_<table>.json`` record is compared
+against the most recent COMPARABLE prior record (same platform, device
+count, quick flag, and config block) and the driver fails when any gated
+metric regressed by more than ``--check-threshold`` (default 25%).
 """
 import argparse
+import json
 import os
 import sys
+
+# dotted payload paths gated per table; "lower" = cost, "higher" = score.
+# A trailing ".*" expands over the keys of the dict at that path. Tables
+# without an entry run ungated (their payloads are derived/model numbers,
+# not wall-clock claims).
+CHECK_METRICS = {
+    "serve": {
+        "uncached.compute_s": "lower",
+        "uncached.p99_ms": "lower",
+        "exact.compute_s": "lower",
+        "exact.scan_qps": "higher",
+        "ivf.scan_qps": "higher",
+        "recall_at_k": "higher",
+        "speedup_scan": "higher",
+    },
+    "table3": {
+        "step_s.*": "lower",
+        "backend_step_s.*": "lower",
+    },
+}
+
+
+def _check_table(name: str, threshold: float) -> list:
+    """Compare the just-written record of BENCH_<name>.json against the
+    most recent comparable prior record. Returns failure strings."""
+    from benchmarks.common import REPO_ROOT, check_regression, comparable
+    metrics = CHECK_METRICS.get(name)
+    if not metrics:
+        return []
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        records = json.load(f)
+    if len(records) < 2:
+        print(f"{name}/CHECK,0.0,no prior record to compare against")
+        return []
+    fresh = records[-1]
+    for prev in reversed(records[:-1]):
+        if comparable(prev, fresh):
+            fails = check_regression(prev, fresh, metrics,
+                                     threshold=threshold)
+            for msg in fails:
+                print(f"{name}/REGRESSION,0.0,{msg}")
+            if not fails:
+                print(f"{name}/CHECK,0.0,ok vs "
+                      f"{prev.get('written', '?')} ({prev.get('git_rev')})")
+            return fails
+    print(f"{name}/CHECK,0.0,no comparable prior record "
+          f"(config/platform changed)")
+    return []
 
 
 def main(argv=None):
@@ -14,7 +73,14 @@ def main(argv=None):
                    help="reduced sizes/steps (CI)")
     p.add_argument("--only", default="",
                    help="comma-separated table names (e.g. table2,table6)")
+    p.add_argument("--check", action="store_true",
+                   help="fail when a gated metric regresses vs the last "
+                        "comparable committed BENCH record")
+    p.add_argument("--check-threshold", type=float, default=0.25,
+                   help="relative regression tolerance for --check")
     args = p.parse_args(argv)
+    if args.check_threshold <= 0:
+        p.error(f"--check-threshold must be > 0, got {args.check_threshold}")
     # 8 fake devices for the hybrid-parallel benchmarks (before jax import)
     os.environ.setdefault(
         "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -35,6 +101,7 @@ def main(argv=None):
     }
     only = set(args.only.split(",")) if args.only else set(tables)
     print("name,us_per_call,derived")
+    regressions = []
     for name, fn in tables.items():
         if name not in only:
             continue
@@ -43,6 +110,12 @@ def main(argv=None):
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
             raise
+        if args.check:
+            regressions += _check_table(name, args.check_threshold)
+    if regressions:
+        print(f"check/FAILED,0.0,{len(regressions)} metric(s) regressed "
+              f"beyond {args.check_threshold:.0%}", file=sys.stderr)
+        return 1
     return 0
 
 

@@ -15,22 +15,165 @@ so queueing during bursts shows up in the tail exactly as a busy server.
 CPU wall-clock is NOT TPU-representative — the numbers gate regressions
 of the serving path, not absolute throughput claims.
 
+``--index ivf`` switches to the exact-vs-IVF leg: the data stream's
+clustered class prototypes are installed as the head weights (a converged
+cosine head; a random matrix has no cluster structure to index), an
+``IVFIndex`` is fit, and the IDENTICAL trace is replayed through the
+exact scan and the IVF path. Reports recall@k of IVF against exact, the
+latency delta, and the SATURATED scan throughput of both step functions
+(full micro-batch, median of repeated timed calls — replay QPS is
+arrival-limited, so the sublinear-serving claim is gated on scan_qps).
+
   PYTHONPATH=src:. python benchmarks/serve_replay.py --classes 4096 \
       --head full [--backend pallas] [--topk 5] [--quick] [--out DIR]
+  PYTHONPATH=src:. python benchmarks/serve_replay.py --index ivf [--nprobe N]
 """
 from __future__ import annotations
 
 import argparse
 import os
 import sys
+import time
 
 
-def run(quick: bool = False, *, classes: int = 4096, feat_dim: int = 64,
+def _run_ivf(quick: bool, *, classes: int, feat_dim: int, head: str,
+             backend: str, topk: int, duration: float, pool: int,
+             zipf: float, max_batch: int, max_wait_ms: float, nprobe: int,
+             seed: int, out_root: str, write: bool) -> dict:
+    """Exact-vs-IVF serving leg (see module docstring)."""
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from benchmarks.common import row, timeit, write_bench
+    from repro.api import Experiment
+    from repro.configs.base import HeadConfig
+    from repro.serving import (TraceConfig, VirtualClock, generate_trace,
+                               latency_stats, replay_trace)
+    from repro.train import hybrid
+
+    exp = Experiment.from_config(
+        system="paper", classes=classes, feat_dim=feat_dim, batch=max_batch,
+        head=HeadConfig(softmax_impl=head, backend=backend), log_every=0)
+    if not exp.head.params_are_class_weights or not topk:
+        raise ValueError("--index ivf needs a W-head and --topk > 0")
+    # install CLUSTERED class weights — a stand-in for what a converged
+    # cosine head learns (confusable classes share a neighborhood). The
+    # quantizer needs real cluster structure: an untrained random matrix
+    # would cap recall near nprobe/n_clusters. Offset norm 0.5 around unit
+    # centers keeps clusters tight, as trained class embeddings are.
+    rng = np.random.default_rng(seed)
+    n_cent = max(1, classes // 64)
+    centers = rng.standard_normal((n_cent, feat_dim)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    cls_of = rng.integers(0, n_cent, classes)
+    protos = (centers[cls_of]
+              + rng.standard_normal((classes, feat_dim)).astype(np.float32)
+              * (0.5 / np.sqrt(feat_dim)))
+    protos /= np.linalg.norm(protos, axis=1, keepdims=True)
+    protos = protos.astype(np.float32)
+    v_pad = exp.state.head_params.shape[0]
+    w_host = (np.pad(protos, ((0, v_pad - classes), (0, 0)))
+              if v_pad != classes else protos)
+    w = jax.device_put(w_host, NamedSharding(exp.mesh, P(hybrid.AXIS, None)))
+    exp.trainer.state = exp.trainer.state._replace(head_params=w)
+
+    t0 = time.perf_counter()
+    idx = exp.ivf_index(nprobe=nprobe, refit=True)
+    fit_s = time.perf_counter() - t0
+    np_eff = idx.resolve_nprobe(nprobe or None)
+    row("serve/ivf_fit", fit_s * 1e6,
+        f"n_clusters={idx.n_clusters} cap={idx.cap} nprobe={np_eff} "
+        f"fit_s={fit_s:.2f}")
+
+    tcfg = TraceConfig(duration=duration, pool=pool, zipf_s=zipf, seed=seed)
+    times, qids = generate_trace(tcfg)
+    # query pool matched to the installed weights: each query targets a
+    # class prototype plus small noise (the Zipfian trace stays Zipfian
+    # over the pool). make_query_pool draws from the data stream's looser
+    # prototypes, which would not match the weights installed above.
+    labels = rng.integers(0, classes, pool)
+    queries = (protos[labels]
+               + rng.standard_normal((pool, feat_dim)).astype(np.float32)
+               * (0.1 / np.sqrt(feat_dim))).astype(np.float32)
+    full = np.resize(queries, (max_batch, feat_dim)).astype(np.float32)
+    runs = {}
+    for mode in ("exact", "ivf"):
+        clock = VirtualClock()
+        eng = exp.serving_engine(
+            top_k=topk, max_batch=max_batch, max_wait_ms=max_wait_ms,
+            cache=None, clock=clock.now,
+            index="ivf" if mode == "ivf" else None, nprobe=nprobe or None)
+        eng.warmup(queries[0])
+        done = replay_trace(eng, clock, times, qids, queries)
+        assert len(done) == len(times), (len(done), len(times))
+        lat = latency_stats(done)
+        st = eng.stats()
+        span = (max(r.t_done for r in done) - min(r.t_submit for r in done)
+                if done else 0.0)
+        # saturated scan throughput: one full micro-batch, median of
+        # repeated timed step calls (the replay itself is arrival-limited)
+        step_s = timeit(eng.step_fn, full, max_batch,
+                        n=5 if quick else 15, warmup=2)
+        runs[mode] = {
+            **lat,
+            "qps": lat["n"] / span if span > 0 else 0.0,
+            "mean_batch_occupancy": st["mean_batch_occupancy"],
+            "n_batches": st["n_batches"],
+            "compute_s": st["compute_s"],
+            "step_s": step_s,
+            "scan_qps": max_batch / step_s,
+            "results": {r.rid: np.atleast_1d(r.ids) for r in done},
+        }
+        row(f"serve/{mode}_p99", lat["p99_ms"] * 1e3,
+            f"p50_ms={lat['p50_ms']:.2f} p99_ms={lat['p99_ms']:.2f} "
+            f"qps={runs[mode]['qps']:.1f} "
+            f"scan_qps={runs[mode]['scan_qps']:.1f}")
+
+    res_e, res_i = runs["exact"]["results"], runs["ivf"]["results"]
+    recall = float(np.mean([
+        len(set(res_e[rid].tolist()) & set(res_i[rid].tolist())) / topk
+        for rid in res_e]))
+    for r in runs.values():
+        r.pop("results")
+    speedup = runs["ivf"]["scan_qps"] / runs["exact"]["scan_qps"]
+    row("serve/ivf_vs_exact", 0.0,
+        f"recall@{topk}={recall:.3f} scan_speedup={speedup:.2f}x "
+        f"probed={np_eff}/{idx.n_clusters} clusters")
+
+    payload = {
+        "quick": quick,
+        "config": {
+            "classes": classes, "feat_dim": feat_dim, "head": head,
+            "backend": backend, "top_k": topk, "max_batch": max_batch,
+            "max_wait_ms": max_wait_ms, "index": "ivf", "nprobe": np_eff,
+            "n_clusters": idx.n_clusters, "cap": idx.cap,
+            "trace": {"duration": duration, "pool": pool, "zipf_s": zipf,
+                      "base_rate": tcfg.base_rate,
+                      "burst_rate": tcfg.burst_rate, "seed": seed,
+                      "n_requests": int(times.shape[0]),
+                      "expected_rate": tcfg.expected_rate},
+        },
+        "exact": runs["exact"],
+        "ivf": runs["ivf"],
+        "recall_at_k": recall,
+        "speedup_scan": speedup,
+        "fit_s": fit_s,
+    }
+    if write:
+        path = write_bench("serve", payload, root=out_root)
+        print(f"# BENCH record appended to {path}")
+    return payload
+
+
+def run(quick: bool = False, *, classes: int = None, feat_dim: int = 64,
         head: str = "full", backend: str = "ref", topk: int = 5,
         duration: float = 2.0, pool: int = 256, zipf: float = 1.1,
         max_batch: int = 32, max_wait_ms: float = 2.0,
         cache_capacity: int = 1024, cosine_threshold: float = 0.0,
-        seed: int = 0, out_root: str = None, write: bool = True) -> dict:
+        seed: int = 0, out_root: str = None, write: bool = True,
+        index: str = "none", nprobe: int = 0) -> dict:
     import numpy as np
 
     from benchmarks.common import row, write_bench
@@ -40,11 +183,23 @@ def run(quick: bool = False, *, classes: int = 4096, feat_dim: int = 64,
                                generate_trace, latency_stats,
                                make_query_pool, replay_trace)
 
+    use_ivf = index == "ivf"
+    if classes is None:
+        # the sublinear-serving claim needs a class count where the exact
+        # scan actually hurts; the cached-vs-uncached leg doesn't
+        classes = 32768 if use_ivf else 4096
     if quick:
-        classes = min(classes, 256)
+        classes = min(classes, 2048 if use_ivf else 256)
         duration = min(duration, 0.4)
         pool = min(pool, 64)
         max_batch = min(max_batch, 8)
+    if use_ivf:
+        return _run_ivf(quick, classes=classes, feat_dim=feat_dim,
+                        head=head, backend=backend, topk=topk,
+                        duration=duration, pool=pool, zipf=zipf,
+                        max_batch=max_batch, max_wait_ms=max_wait_ms,
+                        nprobe=nprobe, seed=seed, out_root=out_root,
+                        write=write)
 
     exp = Experiment.from_config(
         system="paper", classes=classes, feat_dim=feat_dim, batch=max_batch,
@@ -124,7 +279,14 @@ def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true",
                    help="reduced sizes (CI / smoke)")
-    p.add_argument("--classes", type=int, default=4096)
+    p.add_argument("--classes", type=int, default=None,
+                   help="class count (default 4096; 32768 with --index ivf)")
+    p.add_argument("--index", choices=["none", "ivf"], default="none",
+                   help="'ivf' runs the exact-vs-IVF leg: recall@k, "
+                        "latency delta, saturated scan QPS of both paths")
+    p.add_argument("--nprobe", type=int, default=0,
+                   help="--index ivf: centroids probed per shard "
+                        "(0 = index default, max(2, n_clusters/32))")
     p.add_argument("--feat-dim", type=int, default=64)
     p.add_argument("--head", default="full",
                    choices=["full", "knn", "selective", "mach", "sampled",
@@ -160,7 +322,8 @@ def main(argv=None):
         max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
         cache_capacity=args.cache_capacity,
         cosine_threshold=args.cosine_threshold, seed=args.seed,
-        out_root=args.out, write=not args.no_write)
+        out_root=args.out, write=not args.no_write,
+        index=args.index, nprobe=args.nprobe)
     return 0
 
 

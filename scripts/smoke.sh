@@ -89,6 +89,55 @@ for rec in records:
 print("BENCH_serve.json: p99 + cache hit-rate fields OK")
 EOF
 
+# IVF serving index: full + knn heads through the ref AND pallas rerank
+# backends on a tiny config — recall vs the exact scan at the default
+# nprobe, and bitwise id equality when every cell is probed
+echo "=== serving tier / IVF index (full + knn, ref + pallas) ==="
+PYTHONPATH=src:. python - <<'EOF'
+import numpy as np, jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.api import Experiment
+from repro.configs.base import HeadConfig
+from repro.train import hybrid
+
+classes, d, mb, k = 1024, 16, 16, 5
+rng = np.random.default_rng(0)
+centers = rng.standard_normal((classes // 64, d)).astype(np.float32)
+centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+protos = centers[rng.integers(0, len(centers), classes)] + \
+    rng.standard_normal((classes, d)).astype(np.float32) * (0.3 / np.sqrt(d))
+protos /= np.linalg.norm(protos, axis=1, keepdims=True)
+protos = protos.astype(np.float32)
+q = (protos[rng.integers(0, classes, mb)] +
+     rng.standard_normal((mb, d)).astype(np.float32) * (0.1 / np.sqrt(d))
+     ).astype(np.float32)
+for head in ("full", "knn"):
+    for backend in ("ref", "pallas"):
+        exp = Experiment.from_config(
+            system="paper", classes=classes, feat_dim=d, batch=mb,
+            head=HeadConfig(softmax_impl=head, backend=backend,
+                            knn_k=8, knn_kprime=16), log_every=0)
+        w = jax.device_put(protos,
+                           NamedSharding(exp.mesh, P(hybrid.AXIS, None)))
+        exp.trainer.state = exp.trainer.state._replace(head_params=w)
+        idx = exp.ivf_index(refit=True)
+        exact = np.asarray(exp.serving_engine(
+            top_k=k, max_batch=mb, max_wait_ms=0.0,
+            cache=None).step_fn(q.copy(), mb)[0])
+        ivf = np.asarray(exp.serving_engine(
+            top_k=k, max_batch=mb, max_wait_ms=0.0, cache=None,
+            index="ivf").step_fn(q.copy(), mb)[0])
+        rec = np.mean([len(set(exact[i]) & set(ivf[i])) / k
+                       for i in range(mb)])
+        full_probe = np.asarray(exp.serving_engine(
+            top_k=k, max_batch=mb, max_wait_ms=0.0, cache=None,
+            index="ivf", nprobe=idx.n_clusters).step_fn(q.copy(), mb)[0])
+        assert (full_probe == exact).all(), (head, backend)
+        assert rec >= 0.9, (head, backend, rec)
+        print(f"ivf {head}/{backend}: C={idx.n_clusters} cap={idx.cap} "
+              f"nprobe={idx.nprobe} recall@{k}={rec:.3f} nprobe=C exact OK")
+EOF
+
 # zoo: the default full head plus the two newest registry heads (every head
 # goes through the same gspmd.make_head_train_step seam)
 for head in full sampled csoft; do

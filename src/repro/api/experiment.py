@@ -89,6 +89,30 @@ class Experiment:
         _validate_serve_args(effective_vocab(self.model_cfg), None, top_k)
         return ServingEngine.for_experiment(self, top_k=top_k, **kw)
 
+    def ivf_index(self, *, n_clusters: int = 0, nprobe: int = 0,
+                  iters: int = 8, refit: bool = False):
+        """The experiment's ``repro.serving.IVFIndex`` over its class
+        shards, fit lazily and cached. The cached index is REFIT whenever
+        ``weights_version`` has moved since the fit — the same seam that
+        invalidates the serving score cache — so train steps, head
+        refreshes, and checkpoint restores all retire a stale quantizer.
+        ``refit=True`` forces a refit; explicit knobs only apply when a
+        (re)fit happens."""
+        from repro.serving import IVFIndex
+        cur = getattr(self, "_ivf", None)
+        if (refit or cur is None
+                or tuple(cur.version) != tuple(self.weights_version)):
+            cur = IVFIndex.fit(self, n_clusters=n_clusters, nprobe=nprobe,
+                               iters=iters)
+            self._ivf = cur
+        return cur
+
+    def install_ivf_index(self, index) -> None:
+        """Install a restored ``IVFIndex`` (``state_from_restore``) so a
+        resumed server skips the refit. The index still retires itself the
+        moment ``weights_version`` moves past its fit-time snapshot."""
+        self._ivf = index
+
 
 # ---------------------------------------------------------------------------
 # paper system
@@ -192,7 +216,8 @@ class PaperExperiment(Experiment):
         return self.trainer.evaluate(inputs)
 
     def serve(self, inputs=None, *, batch: Optional[int] = None,
-              top_k: Optional[int] = None, return_scores: bool = False):
+              top_k: Optional[int] = None, return_scores: bool = False,
+              index: Optional[str] = None, nprobe: Optional[int] = None):
         """Deploy-style retrieval (§4.5): nearest-class (or hashed-vote)
         predictions for a batch of inputs.
 
@@ -200,22 +225,39 @@ class PaperExperiment(Experiment):
         k-best retrieval with scores — each shard's local top-k (ref:
         ``lax.top_k``; pallas: the divide-and-conquer ``ops.topk_rows``
         kernel) merged over the ring — returning ids [b, k] (descending), or
-        (ids, scores) when ``return_scores`` is set.
+        (ids, scores) when ``return_scores`` is set. ``index="ivf"``
+        (top-k only) serves through the experiment's ``IVFIndex``: probe
+        the ``nprobe`` nearest centroids per shard and rerank only their
+        member rows — sublinear in V (see docs/serving.md).
 
         Without explicit ``inputs`` the call is routed through the
         ``repro.serving`` engine (per-query submit -> one padded
         micro-batch -> batched serve step); results are bitwise-identical
         to the pre-engine path and to per-query submission
         (tests/test_serving.py). Explicit ``inputs`` keep the legacy
-        single-shot jitted step (batch must then divide the ring)."""
+        single-shot jitted step (batch must then divide the ring) — except
+        under ``index="ivf"``, which always serves through the engine."""
         import jax
 
         from repro.train import hybrid
 
         _validate_serve_args(effective_vocab(self.model_cfg), batch, top_k)
-        if inputs is None:
+        if index not in (None, "none", "ivf"):
+            raise ValueError(f"unknown serving index {index!r}; "
+                             f"expected 'none' or 'ivf'")
+        if index == "ivf" and top_k is None:
+            raise ValueError("index='ivf' serves top-k retrieval; "
+                             "pass top_k=...")
+        if inputs is None or index == "ivf":
+            queries = None
+            if inputs is not None:
+                import numpy as np
+                qkey = next(k for k in inputs if k != "labels")
+                queries = np.asarray(inputs[qkey])
+                batch = queries.shape[0]
             return self._serve_via_engine(batch or self.batch, top_k,
-                                          return_scores)
+                                          return_scores, index=index,
+                                          nprobe=nprobe, queries=queries)
         if top_k is not None:
             if top_k not in self._topk_steps:
                 self._topk_steps[top_k] = hybrid.make_topk_serve_step(
@@ -233,25 +275,30 @@ class PaperExperiment(Experiment):
             return jax.device_get(self._serve_step(self.state, inputs))
 
     def _serve_via_engine(self, batch: int, top_k: Optional[int],
-                          return_scores: bool):
+                          return_scores: bool, *,
+                          index: Optional[str] = None,
+                          nprobe: Optional[int] = None, queries=None):
         """Batched serving through the ``repro.serving`` engine: one
-        engine per (top_k, batch) shape, all queries submitted then
-        drained as a single full micro-batch. No cache on this path (a
-        synchronous facade call wants fresh scores, and determinism)."""
+        engine per (top_k, batch, index, nprobe) shape, all queries
+        submitted then drained as a single full micro-batch. No cache on
+        this path (a synchronous facade call wants fresh scores, and
+        determinism)."""
         import numpy as np
 
-        key = (top_k, batch)
+        key = (top_k, batch, index, nprobe)
         eng = self._engines.get(key)
         if eng is None:
             # max_batch >= 2 keeps even a 1-query call on the batched-gemm
             # bucket shapes every other path uses (bitwise consistency)
             eng = self.serving_engine(top_k=top_k,
                                       max_batch=max(batch, 2),
-                                      max_wait_ms=0.0, cache=None)
+                                      max_wait_ms=0.0, cache=None,
+                                      index=index, nprobe=nprobe)
             self._engines[key] = eng
-        inputs = self.data_fn(10**6, batch)
-        qkey = next(k for k in inputs if k != "labels")
-        queries = np.asarray(inputs[qkey])
+        if queries is None:
+            inputs = self.data_fn(10**6, batch)
+            qkey = next(k for k in inputs if k != "labels")
+            queries = np.asarray(inputs[qkey])
         for i in range(batch):
             eng.submit(queries[i])
         done = sorted(eng.drain(), key=lambda r: r.rid)
@@ -572,10 +619,18 @@ class ZooExperiment(Experiment):
                                          self.head_state.aux, inputs))
 
     def serve(self, *, prompt_len: int = 32, gen: int = 16,
-              batch: Optional[int] = None):
+              batch: Optional[int] = None, top_k: Optional[int] = None,
+              queries=None, return_scores: bool = False,
+              index: Optional[str] = None, nprobe: Optional[int] = None):
         """Batched greedy decoding: prefill once, then single-token decode
         steps through the KV/SSM cache and the sharded-vocab argmax.
-        Returns generated tokens [batch, gen]."""
+        Returns generated tokens [batch, gen].
+
+        ``top_k=k`` switches to feature retrieval against the model's
+        class matrix (same contract as ``PaperExperiment.serve(top_k=...)``,
+        W-heads only): ``queries`` [b, d_model] embeddings (a deterministic
+        synthetic pool when omitted) -> ids [b, k] (or (ids, scores)).
+        ``index="ivf"`` routes it through the experiment's ``IVFIndex``."""
         import jax
         import jax.numpy as jnp
 
@@ -583,7 +638,39 @@ class ZooExperiment(Experiment):
         from repro.models import decoder as dec_lib
         from repro.models import lm
 
-        _validate_serve_args(effective_vocab(self.model_cfg), batch, None)
+        _validate_serve_args(effective_vocab(self.model_cfg), batch, top_k)
+        if index not in (None, "none", "ivf"):
+            raise ValueError(f"unknown serving index {index!r}; "
+                             f"expected 'none' or 'ivf'")
+        if index == "ivf" and top_k is None:
+            raise ValueError("index='ivf' serves top-k retrieval; "
+                             "pass top_k=...")
+        if top_k is not None:
+            import numpy as np
+            if queries is None:
+                b = batch or self.batch
+                queries = np.random.default_rng(0).standard_normal(
+                    (b, self.model_cfg.d_model)).astype(np.float32)
+            queries = np.asarray(queries, np.float32)
+            b = queries.shape[0]
+            engines = getattr(self, "_engines", None)
+            if engines is None:
+                engines = self._engines = {}
+            key = (top_k, b, index, nprobe)
+            eng = engines.get(key)
+            if eng is None:
+                eng = self.serving_engine(top_k=top_k, max_batch=max(b, 2),
+                                          max_wait_ms=0.0, cache=None,
+                                          index=index, nprobe=nprobe)
+                engines[key] = eng
+            for i in range(b):
+                eng.submit(queries[i])
+            done = sorted(eng.drain(), key=lambda r: r.rid)
+            assert len(done) == b
+            ids = np.stack([r.ids for r in done])
+            if return_scores:
+                return ids, np.stack([r.scores for r in done])
+            return ids
         if prompt_len <= 0 or gen <= 0:
             raise ValueError(
                 f"prompt_len and gen must be positive, got "

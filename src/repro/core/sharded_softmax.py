@@ -239,6 +239,21 @@ def serve_argmax_local(f_loc, w_loc, *, model_axis: str, n_valid: int = 0,
     return _combine_argmax(vmax, gid, model_axis), None
 
 
+def _merge_topk_ring(vals, gids, k: int, model_axis):
+    """Merge per-shard local top-k candidates into the global top-k: one
+    all-gather over the model axis, then a tiny [b, P*k] ``lax.top_k``.
+    Shared by the exact scan (``serve_topk_local``) and the IVF index path
+    (``serve_topk_ivf_local``). Returns (vals [b, k] desc, gids [b, k]),
+    replicated along the model axis."""
+    all_v = jax.lax.all_gather(vals, model_axis, axis=0)   # [P, b, k]
+    all_g = jax.lax.all_gather(gids, model_axis, axis=0)
+    b = vals.shape[0]
+    flat_v = jnp.moveaxis(all_v, 0, 1).reshape(b, -1)      # [b, P*k]
+    flat_g = jnp.moveaxis(all_g, 0, 1).reshape(b, -1)
+    top_v, pos = jax.lax.top_k(flat_v, k)
+    return top_v, jnp.take_along_axis(flat_g, pos, axis=1)
+
+
 def serve_topk_local(f_loc, w_loc, k: int, *, model_axis: str,
                      n_valid: int = 0, backend: str = "ref",
                      chunk: int = 2048):
@@ -268,13 +283,7 @@ def serve_topk_local(f_loc, w_loc, k: int, *, model_axis: str,
         pad = k - kk
         vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
         gids = jnp.pad(gids, ((0, 0), (0, pad)), constant_values=-1)
-    all_v = jax.lax.all_gather(vals, model_axis, axis=0)   # [P, b, k]
-    all_g = jax.lax.all_gather(gids, model_axis, axis=0)
-    b = vals.shape[0]
-    flat_v = jnp.moveaxis(all_v, 0, 1).reshape(b, -1)      # [b, P*k]
-    flat_g = jnp.moveaxis(all_g, 0, 1).reshape(b, -1)
-    top_v, pos = jax.lax.top_k(flat_v, k)
-    return top_v, jnp.take_along_axis(flat_g, pos, axis=1)
+    return _merge_topk_ring(vals, gids, k, model_axis)
 
 
 def mask_padded_rows(x, n_queries, fill):
@@ -301,6 +310,70 @@ def serve_topk_batched_local(f_loc, w_loc, k: int, n_queries, *,
     vals, gids = serve_topk_local(f_loc, w_loc, k, model_axis=model_axis,
                                   n_valid=n_valid, backend=backend,
                                   chunk=chunk)
+    return (mask_padded_rows(vals, n_queries, -jnp.inf),
+            mask_padded_rows(gids, n_queries, -1))
+
+
+def serve_topk_ivf_local(f_loc, w_loc, cent_loc, members_loc, k: int,
+                         nprobe: int, *, model_axis: str,
+                         backend: str = "ref", block_a: int = 128):
+    """IVF top-k retrieval (sublinear in the class count, ROADMAP "learned
+    ANN index"): probe the query's top-``nprobe`` k-means centroids of this
+    shard, rerank ONLY the member rows of the probed clusters, then merge
+    across shards with the same one-ring all-gather as the exact scan.
+
+    f_loc [b, D] replicated along the model axis; w_loc [V_loc, D] the
+    class shard; cent_loc [C, D] unit centroids fit over the shard
+    (``repro.serving.index``); members_loc [C, cap] int32 local row ids per
+    cluster, -1 padded (every valid class appears in exactly one cluster,
+    so ``nprobe == C`` recovers the exact scan). The rerank scores raw
+    ``f @ w.T`` dot products — identical to the exact path — over
+    A = nprobe * cap candidates instead of V_loc columns (``ref``: gather +
+    ``lax.top_k``; ``pallas``: the fused ``ops.ivf_rerank`` kernel). The
+    probe always uses the normalized query against the unit centroids
+    (cluster membership is directional); cosine heads normalize f/w before
+    calling, exactly like the exact serve steps.
+    """
+    c, cap = members_loc.shape
+    v_loc = w_loc.shape[0]
+    v_start = _flat_axis_index(model_axis) * v_loc
+    f = f_loc.astype(jnp.float32)
+    b = f.shape[0]
+    fq = _normalize(f)
+    n_probe = min(nprobe, c)
+    _, probe = jax.lax.top_k(fq @ cent_loc.astype(jnp.float32).T, n_probe)
+    cand = jnp.take(members_loc, probe, axis=0).reshape(b, -1)  # [b, A]
+    kk = min(k, cand.shape[1])
+    if backend == "pallas":
+        vals, lids = ops.ivf_rerank(f, w_loc.astype(jnp.float32), cand, kk,
+                                    block_a=block_a)
+    else:
+        safe = jnp.clip(cand, 0, v_loc - 1)
+        wc = jnp.take(w_loc.astype(jnp.float32), safe, axis=0)  # [b, A, D]
+        s = jnp.einsum("bd,bad->ba", f, wc,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(cand >= 0, s, -jnp.inf)
+        vals, pos = jax.lax.top_k(s, kk)
+        lids = jnp.take_along_axis(cand, pos, axis=1)
+    gids = jnp.where(lids >= 0, v_start + lids, -1).astype(jnp.int32)
+    vals = jnp.where(lids >= 0, vals, -jnp.inf)
+    if kk < k:  # fewer candidates than slots: pad before the merge
+        pad = k - kk
+        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        gids = jnp.pad(gids, ((0, 0), (0, pad)), constant_values=-1)
+    return _merge_topk_ring(vals, gids, k, model_axis)
+
+
+def serve_topk_ivf_batched_local(f_loc, w_loc, cent_loc, members_loc, k: int,
+                                 nprobe: int, n_queries, *, model_axis: str,
+                                 backend: str = "ref", block_a: int = 128):
+    """Serving-tier entry for the IVF path: padded micro-batch [b_pad, D]
+    with only the first ``n_queries`` rows real (traced — one jit per
+    bucket). Scoring is row-independent, so padding never perturbs real
+    rows; padded rows come back as (-inf, -1), like the exact path."""
+    vals, gids = serve_topk_ivf_local(
+        f_loc, w_loc, cent_loc, members_loc, k, nprobe,
+        model_axis=model_axis, backend=backend, block_a=block_a)
     return (mask_padded_rows(vals, n_queries, -jnp.inf),
             mask_padded_rows(gids, n_queries, -1))
 

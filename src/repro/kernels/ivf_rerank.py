@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused gather + top-k rerank for the IVF serving index.
+
+The IVF serve path (``repro.serving.index``) probes the top-``nprobe``
+k-means centroids per query and then scores ONLY the member rows of the
+probed clusters. The ref path gathers ``w[cand]`` to a [B, A, D] tensor in
+HBM, matmuls to dense [B, A] scores, and runs ``lax.top_k``. This kernel
+fuses all three stages, reusing the two idioms already proven in this repo:
+
+  * the per-row dynamic-slice gather of ``sparse_ce`` (candidate ids live
+    in SMEM, the full [V_loc, D] shard stays whole in kernel memory, and a
+    fori_loop of row slices — per-row DMAs on hardware — fills a [ba, D]
+    VMEM scratch tile);
+  * the k max-extraction sweeps of ``topk_dc`` stage 1 (k is small and
+    static, so the sweeps unroll onto the VPU).
+
+The grid is (query, candidate-tile); the running top-k accumulator IS the
+output block (same block for every tile step → revisited in place, the
+standard sequential-grid accumulator pattern). Per tile the fresh scores
+are concatenated with the current top-k and k sweeps re-extract the best k
+— neither the gathered [A, D] weights nor the [B, A] score tensor ever
+reach HBM.
+
+Candidate slots of -1 are padding (short clusters); they score -inf and
+come back as id -1 when a row has fewer than k real candidates, matching
+the ref path bit-for-bit on ids. Wrapped by ``ops.ivf_rerank``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -jnp.inf
+
+
+def _rerank_kernel(ids_ref, f_ref, w_ref, cand_ref, vals_ref, idx_ref, tile,
+                   *, ba: int, k: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    def body(r, _):
+        tile[pl.ds(r, 1), :] = w_ref[pl.ds(ids_ref[b, j * ba + r], 1), :]
+        return 0
+    jax.lax.fori_loop(0, ba, body, 0)
+
+    f = f_ref[...]                                        # [1, D]
+    s = jax.lax.dot_general(f, tile[...], (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [1, ba]
+    cand = cand_ref[...]                                  # [1, ba]; -1 = pad
+    s = jnp.where(cand >= 0, s, NEG)
+
+    # merge the tile into the running top-k: k unrolled max-extraction
+    # sweeps over [current top-k ++ tile scores] (topk_dc stage-1 style)
+    cat_v = jnp.concatenate([vals_ref[...], s], axis=1)   # [1, k + ba]
+    cat_i = jnp.concatenate([idx_ref[...], cand], axis=1)
+    col = jax.lax.broadcasted_iota(jnp.int32, cat_v.shape, 1)
+    vals = jnp.full(vals_ref.shape, NEG, jnp.float32)
+    idxs = jnp.full(idx_ref.shape, -1, jnp.int32)
+    for i in range(k):
+        m = jnp.max(cat_v, axis=1)                        # [1]
+        am = jnp.argmax(cat_v, axis=1).astype(jnp.int32)
+        picked = jnp.take_along_axis(cat_i, am[:, None], axis=1)[:, 0]
+        # a -inf max means the row ran out of real candidates: the slot
+        # must surface as id -1 (never a stale duplicate of a real id)
+        picked = jnp.where(jnp.isfinite(m), picked, -1)
+        vals = vals.at[:, i].set(m)
+        idxs = idxs.at[:, i].set(picked)
+        cat_v = jnp.where(col == am[:, None], NEG, cat_v)
+    vals_ref[...] = vals
+    idx_ref[...] = idxs
+
+
+def ivf_rerank(f, w, cand, k: int, *, block_a: int = 128,
+               interpret: bool = True):
+    """f [B, D]; w [V_loc, D] (rows gathered in-kernel); cand [B, A] int32
+    local row ids with -1 marking empty slots. Returns (vals [B, k] fp32
+    descending, ids [B, k] int32 row ids, -1 where a row has fewer than k
+    real candidates)."""
+    b, d = f.shape
+    v = w.shape[0]
+    a = cand.shape[1]
+    ba = min(block_a, max(8, a))
+    pa = (-a) % ba
+    cand = cand.astype(jnp.int32)
+    if pa:
+        cand = jnp.pad(cand, ((0, 0), (0, pa)), constant_values=-1)
+    ap = a + pa
+    safe = jnp.clip(cand, 0, v - 1)                       # clip-safe gather
+    vals, idx = pl.pallas_call(
+        functools.partial(_rerank_kernel, ba=ba, k=k),
+        out_shape=(jax.ShapeDtypeStruct((b, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, k), jnp.int32)),
+        grid=(b, ap // ba),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec(memory_space=pltpu.VMEM),
+                  pl.BlockSpec((1, ba), lambda i, j: (i, j))],
+        out_specs=(pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i, j: (i, 0))),
+        scratch_shapes=[pltpu.VMEM((ba, d), jnp.float32)],
+        interpret=interpret,
+    )(safe, f.astype(jnp.float32), w.astype(jnp.float32), cand)
+    return vals, idx

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ce_softmax as _ce
+from repro.kernels import ivf_rerank as _ir
 from repro.kernels import knn_dist_topk as _dk
 from repro.kernels import sparse_ce as _sp
 from repro.kernels import topk_dc as _dc
@@ -91,6 +92,18 @@ def topk_rows(x: jax.Array, k: int, *, chunk: int = 2048,
     flat_i = (sub_i.reshape(b, nch, kc) + base).reshape(b, nch * kc)
     vals, pos = jax.lax.top_k(flat_v, kk)
     return vals, jnp.take_along_axis(flat_i, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_a"))
+def ivf_rerank(f, w, cand, k: int, *, block_a: int = 128):
+    """Fused gather + per-row top-k over IVF candidate lists (the serving
+    index's rerank stage). f [B, D]; w [V_loc, D] — candidate rows are
+    gathered in-kernel; cand [B, A] int32 local row ids, -1 = empty slot.
+    Returns (vals [B, k] fp32 desc, ids [B, k] int32 row ids, -1 when a row
+    has fewer than k candidates). Neither the gathered [A, D] weights nor
+    the [B, A] scores reach HBM."""
+    return _ir.ivf_rerank(f, w, cand, k, block_a=block_a,
+                          interpret=INTERPRET)
 
 
 # ---------------------------------------------------------------------------

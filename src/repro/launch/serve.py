@@ -45,7 +45,9 @@ def _run_replay(exp, args, feat_dim: int) -> int:
     clock = VirtualClock()
     eng = exp.serving_engine(
         top_k=args.topk or None, max_batch=args.batch,
-        max_wait_ms=args.max_wait_ms, cache=cache, clock=clock.now)
+        max_wait_ms=args.max_wait_ms, cache=cache, clock=clock.now,
+        index=args.index if args.index != "none" else None,
+        nprobe=args.nprobe or None)
     eng.warmup(pool[0])
     done = replay_trace(eng, clock, times, qids, pool)
     lat = latency_stats(done)
@@ -82,6 +84,13 @@ def main(argv=None):
     p.add_argument("--topk", type=int, default=0,
                    help="paper system: return the k best classes per query "
                         "with scores (0 = greedy argmax)")
+    p.add_argument("--index", choices=["none", "ivf"], default="none",
+                   help="top-k serving index: 'ivf' probes nprobe k-means "
+                        "centroids per class shard and reranks only their "
+                        "member rows (sublinear in the class count)")
+    p.add_argument("--nprobe", type=int, default=0,
+                   help="--index ivf: centroids probed per shard "
+                        "(0 = the index default, max(2, n_clusters/32))")
     # shared
     p.add_argument("--backend", choices=["ref", "pallas"], default="ref",
                    help="head hot-path compute backend")
@@ -109,6 +118,12 @@ def main(argv=None):
     if args.system == "paper" and args.topk > args.classes:
         p.error(f"--topk {args.topk} exceeds --classes {args.classes}: "
                 f"retrieval cannot return more classes than exist")
+    if args.index == "ivf" and not args.topk:
+        p.error("--index ivf serves top-k retrieval; pass --topk K")
+    if args.nprobe < 0:
+        p.error(f"--nprobe must be >= 0, got {args.nprobe}")
+    if args.nprobe and args.index != "ivf":
+        p.error("--nprobe only applies with --index ivf")
     if args.cache < 0:
         p.error(f"--cache must be >= 0, got {args.cache}")
     if args.max_wait_ms < 0:
@@ -129,11 +144,14 @@ def main(argv=None):
             return _run_replay(exp, args, args.feat_dim)
         t0 = time.perf_counter()
         if args.topk:
-            ids, scores = exp.serve(batch=args.batch, top_k=args.topk,
-                                    return_scores=True)
+            ids, scores = exp.serve(
+                batch=args.batch, top_k=args.topk, return_scores=True,
+                index=args.index if args.index != "none" else None,
+                nprobe=args.nprobe or None)
             dt = time.perf_counter() - t0
+            via = f" via {args.index}" if args.index != "none" else ""
             print(f"[serve] {args.head}-head top-{args.topk} retrieval over "
-                  f"{args.classes} classes ({args.backend}): "
+                  f"{args.classes} classes ({args.backend}{via}): "
                   f"{ids.shape[0]} queries in {dt*1e3:.1f} ms")
             print("[serve] first query ids:   ", ids[0].tolist())
             print("[serve] first query scores:",
@@ -158,6 +176,27 @@ def main(argv=None):
         args = argparse.Namespace(**{**vars(args),
                                      "classes": exp.model_cfg.vocab_size})
         return _run_replay(exp, args, exp.model_cfg.d_model)
+    if args.topk:
+        # zoo feature retrieval against the model's class matrix (same
+        # contract as the paper top-k path; token decoding stays below)
+        try:
+            t0 = time.perf_counter()
+            ids, scores = exp.serve(
+                batch=args.batch, top_k=args.topk, return_scores=True,
+                index=args.index if args.index != "none" else None,
+                nprobe=args.nprobe or None)
+            dt = time.perf_counter() - t0
+        except NotImplementedError as e:
+            print(f"[serve] {e}")
+            return 0
+        via = f" via {args.index}" if args.index != "none" else ""
+        print(f"[serve] zoo {args.head}-head top-{args.topk} retrieval over "
+              f"{exp.model_cfg.vocab_size} classes ({args.backend}{via}): "
+              f"{ids.shape[0]} queries in {dt*1e3:.1f} ms")
+        print("[serve] first query ids:   ", ids[0].tolist())
+        print("[serve] first query scores:",
+              [round(float(s), 3) for s in scores[0]])
+        return 0
     try:
         t0 = time.perf_counter()
         gen = exp.serve(prompt_len=args.prompt_len, gen=args.gen,

@@ -15,6 +15,10 @@ leg of that made concrete:
   * ``ScoreCache`` — LRU hot-query score cache (embedding-keyed exact
     match, optional cosine-threshold hits) for head-of-distribution
     traffic, invalidated when the served weights refresh.
+  * ``IVFIndex`` — sublinear top-k: a k-means coarse quantizer fit
+    distributed over the class shards; serve probes ``nprobe`` centroids
+    and reranks only their member rows (``ServingEngine.for_experiment(...,
+    index="ivf")``), refit on the same ``weights_version`` seam.
   * ``repro.serving.trace`` — synthetic bursty/Zipfian trace generator +
     ``VirtualClock`` for load replay (``benchmarks/serve_replay.py``).
 
@@ -23,11 +27,12 @@ See docs/serving.md for the lifecycle, the knobs, and the BENCH schema.
 from repro.serving.cache import ScoreCache
 from repro.serving.coalescer import Coalescer, MicroBatch, Request, bucket_for
 from repro.serving.engine import ServingEngine, latency_stats, replay_trace
+from repro.serving.index import IVFIndex
 from repro.serving.trace import (TraceConfig, VirtualClock, generate_trace,
                                  make_query_pool)
 
 __all__ = [
-    "Coalescer", "MicroBatch", "Request", "ScoreCache", "ServingEngine",
-    "TraceConfig", "VirtualClock", "bucket_for", "generate_trace",
-    "latency_stats", "make_query_pool", "replay_trace",
+    "Coalescer", "IVFIndex", "MicroBatch", "Request", "ScoreCache",
+    "ServingEngine", "TraceConfig", "VirtualClock", "bucket_for",
+    "generate_trace", "latency_stats", "make_query_pool", "replay_trace",
 ]

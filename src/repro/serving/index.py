@@ -1,0 +1,255 @@
+"""``repro.serving.index`` — IVF coarse-quantizer over the class shards.
+
+Serving cost was linear in the class count V: every query scored the full
+[V/n, D] shard on every device — the one hot path still paying the cost the
+paper's whole training system avoids (§3.2's KNN softmax trains against a
+small active set; Zhang'18 / Vijayanarasimhan'16 in PAPERS.md show a small
+active set preserves top-k quality). ``IVFIndex`` applies the same idea at
+serve time:
+
+  * **fit** — spherical k-means (Lloyd on L2-normalized rows, assignment by
+    max dot product, centroids renormalized each iteration) runs as ONE
+    shard_map over the model ring: each device clusters its own [V/n, D]
+    shard, so the index is trained distributed and sharded exactly like the
+    head it indexes. Initialization is a deterministic stride over the valid
+    rows (no RNG — refits are reproducible). Member lists are then packed
+    host-side into a fixed [P, C, cap] int32 tensor with a CAPACITY-BALANCED
+    assignment (``cap = ceil(1.25 * V_loc/C)``; rows greedily take their
+    best-scoring cluster with space left, most-confident rows first) — the
+    same device_get/pack/device_put round-trip as the KNN graph's
+    ``compress_graph``, but with a deterministic rerank cost: probing
+    ``nprobe`` clusters scans exactly ``nprobe * cap`` rows, with no
+    straggler cluster inflating every query. The 25% slack keeps natural
+    clusters together (a hard ``cap = V_loc/C`` exiles boundary rows to
+    their 2nd-best cell, costing ~4 recall points at default nprobe). No
+    row is ever dropped, so ``nprobe == n_clusters`` returns the exact
+    scan's ids bit-for-bit (scores agree to float accumulation order).
+  * **probe + rerank** — at serve time each shard ranks its centroids
+    against the (normalized) query, takes the top ``nprobe``, and reranks
+    only their member rows (``core.sharded_softmax.serve_topk_ivf_local``;
+    pallas backend = the fused ``ops.ivf_rerank`` gather+top-k kernel), then
+    the existing one-ring all-gather merges shard winners. Retrieval cost
+    scales with nprobe * cap, not V.
+  * **lifecycle** — the index snapshots the experiment's ``weights_version``
+    at fit time; the serving engine refits whenever the version moves (the
+    same probe that invalidates the score cache — one seam for "the served
+    weights changed", covering train steps, head refreshes, and checkpoint
+    restores). ``state_to_save``/``state_from_restore`` mirror the
+    ``SoftmaxHead`` checkpoint contract so a resumed server reinstalls the
+    index instead of refitting (tests/test_ivf_index.py round-trips it
+    bitwise through ``repro.checkpoint``).
+
+Defaults: C = round(sqrt(V_loc)) clusters per shard, nprobe = max(2, C/32)
+(a probe scans a whole balanced cluster, so two clusters already cover the
+confusable neighborhood of a query even when it sits on a cell boundary;
+the bench's recall-vs-latency table in docs/serving.md is the tuning
+guide).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+
+def default_n_clusters(v_loc: int) -> int:
+    """sqrt(V_loc) clusters per shard — the classic IVF balance point
+    between probe cost (C) and rerank cost (V_loc / C per cluster)."""
+    return max(1, min(v_loc, int(round(v_loc ** 0.5))))
+
+
+def default_nprobe(n_clusters: int) -> int:
+    """At least two probes — a query near a cell boundary has its true
+    neighborhood split across two cells, and one probe caps recall ~0.91
+    no matter how clusterable the weights are (measured in the bench);
+    past that, FAISS-style C/32 scales with the cell count."""
+    return max(2, n_clusters // 32)
+
+
+def _axes_tuple(axes) -> tuple:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _exp_head_geometry(exp):
+    """(w [V, D] on-mesh, mesh, model axes, n_valid) of an experiment's
+    retrieval matrix. Works for BOTH systems; sketch heads (mach/csoft)
+    have no [V, D] class matrix to index and are refused loudly."""
+    if hasattr(exp, "trainer"):                            # paper system
+        from repro.train.hybrid import AXIS
+        head = exp.trainer.head
+        if not head.params_are_class_weights:
+            raise NotImplementedError(
+                f"the IVF index quantizes the [V, D] class matrix, which "
+                f"the {head.name!r} head does not train; use a W-head "
+                f"(full/knn/selective/sampled)")
+        return exp.state.head_params, exp.mesh, AXIS, head.n_valid
+    if hasattr(exp, "par"):                                # zoo system
+        from repro.models import lm
+        head = exp.head
+        if not head.params_are_class_weights:
+            raise NotImplementedError(
+                f"the IVF index quantizes the [V, D] class matrix, which "
+                f"the {head.name!r} head does not train; use a W-head "
+                f"(full/knn/selective/sampled)")
+        return (lm.head_weight(exp.params, exp.model_cfg), exp.mesh,
+                exp._maxis, head.n_valid)
+    raise TypeError(f"not a paper/zoo Experiment: {type(exp).__name__}")
+
+
+@dataclasses.dataclass
+class IVFIndex:
+    """A fitted coarse quantizer over one experiment's class shards.
+
+    centroids [P, C, D] fp32 and members [P, C, cap] int32 are device
+    arrays sharded along the model axes (leading dim P = shard count);
+    counts [P, C] stays a host numpy array (stats only)."""
+
+    centroids: Any
+    members: Any
+    counts: np.ndarray
+    n_clusters: int
+    cap: int
+    nprobe: int
+    iters: int
+    model_axis: Any
+    version: Tuple[int, ...]
+
+    def resolve_nprobe(self, nprobe: Optional[int] = None) -> int:
+        """Effective probe width: caller override, else the fit-time
+        default, clamped to the cluster count."""
+        return max(1, min(int(nprobe or self.nprobe), self.n_clusters))
+
+    # -- fit ----------------------------------------------------------------
+
+    @classmethod
+    def fit(cls, exp, *, n_clusters: int = 0, nprobe: int = 0,
+            iters: int = 8) -> "IVFIndex":
+        """Fit over the experiment's CURRENT class shards (see module
+        docstring). Deterministic: no RNG anywhere in the fit."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.sharded_softmax import (_flat_axis_index, _normalize,
+                                                _shard_limit)
+
+        w, mesh, axes, n_valid = _exp_head_geometry(exp)
+        v, d = w.shape
+        n_shards = int(np.prod([mesh.shape[a] for a in _axes_tuple(axes)]))
+        v_loc = v // n_shards
+        c = min(v_loc, n_clusters or default_n_clusters(v_loc))
+
+        def body(w_loc):
+            v_start = _flat_axis_index(axes) * v_loc
+            limit = _shard_limit(v_start, v_loc, n_valid)
+            valid = jnp.arange(v_loc) < limit
+            wn = _normalize(w_loc.astype(jnp.float32))
+            wn = jnp.where(valid[:, None], wn, 0.0)
+            # deterministic strided init over the valid rows
+            idx0 = jnp.clip((jnp.arange(c) * jnp.maximum(limit, 1)) // c,
+                            0, v_loc - 1)
+            cent = _normalize(wn[idx0])
+
+            def lloyd(cent, _):
+                assign = jnp.argmax(wn @ cent.T, axis=1)
+                oh = jax.nn.one_hot(assign, c, dtype=jnp.float32)
+                oh = oh * valid[:, None].astype(jnp.float32)
+                cnt = jnp.sum(oh, axis=0)
+                # empty clusters keep their previous centroid
+                cent = jnp.where(cnt[:, None] > 0, _normalize(oh.T @ wn),
+                                 cent)
+                return cent, None
+
+            cent, _ = jax.lax.scan(lloyd, cent, None, length=iters)
+            return cent[None]
+
+        with jax.set_mesh(mesh):
+            cent = jax.device_get(jax.jit(jax.shard_map(
+                body, mesh=mesh, in_specs=(P(axes, None),),
+                out_specs=P(axes, None, None),
+                check_vma=False))(w))
+            w_host = np.asarray(jax.device_get(w), np.float32)
+
+        # host-side member packing (the compress_graph idiom), capacity-
+        # balanced with 25% slack: cap = ceil(1.25 * V_loc/C); rows claim
+        # their best-scoring cluster that still has space, most-confident
+        # rows first, so the member tensor is dense and the per-probe
+        # rerank cost is exactly cap rows. Deterministic (stable sorts,
+        # no RNG).
+        p = cent.shape[0]
+        cap = max(1, min(v_loc, -(-(5 * v_loc) // (4 * c))))
+        nv = int(n_valid) if n_valid else v
+        counts = np.zeros((p, c), np.int32)
+        members = np.full((p, c, cap), -1, np.int32)
+        for s in range(p):
+            limit = min(max(nv - s * v_loc, 0), v_loc)
+            if limit == 0:
+                continue
+            ws = w_host[s * v_loc:s * v_loc + limit]
+            wn = ws / np.maximum(
+                np.linalg.norm(ws, axis=1, keepdims=True), 1e-12)
+            scores = wn @ cent[s].T                       # [limit, C]
+            pref = np.argsort(-scores, axis=1, kind="stable")
+            order = np.argsort(-scores.max(axis=1), kind="stable")
+            fill = counts[s]
+            for r in order:
+                for ci in pref[r]:
+                    if fill[ci] < cap:
+                        members[s, ci, fill[ci]] = r
+                        fill[ci] += 1
+                        break
+        sh = NamedSharding(mesh, P(axes, None, None))
+        with jax.set_mesh(mesh):
+            cent_dev = jax.device_put(jnp.asarray(cent, jnp.float32), sh)
+            members_dev = jax.device_put(jnp.asarray(members), sh)
+        return cls(centroids=cent_dev, members=members_dev, counts=counts,
+                   n_clusters=c, cap=cap,
+                   nprobe=min(c, nprobe or default_nprobe(c)),
+                   iters=iters, model_axis=axes,
+                   version=tuple(exp.weights_version))
+
+    # -- checkpoint contract (mirrors SoftmaxHead state_to_save/restore) ----
+
+    def state_to_save(self) -> dict:
+        """Checkpoint pytree — pass to ``repro.checkpoint.save`` (or embed
+        in a larger snapshot) so a resumed server skips the refit."""
+        import jax.numpy as jnp
+        return {
+            "centroids": self.centroids,
+            "members": self.members,
+            "counts": jnp.asarray(self.counts),
+            "meta": {
+                "n_clusters": jnp.asarray(self.n_clusters, jnp.int32),
+                "cap": jnp.asarray(self.cap, jnp.int32),
+                "nprobe": jnp.asarray(self.nprobe, jnp.int32),
+                "iters": jnp.asarray(self.iters, jnp.int32),
+                "version": jnp.asarray(self.version, jnp.int32),
+            },
+        }
+
+    @classmethod
+    def state_from_restore(cls, tree: dict, mesh, *,
+                           model_axis) -> "IVFIndex":
+        """Re-place a restored snapshot on the serving mesh (device_put with
+        the index's own specs, like the heads do)."""
+        import jax
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        sh = NamedSharding(mesh, P(model_axis, None, None))
+        with jax.set_mesh(mesh):
+            cent = jax.device_put(np.asarray(tree["centroids"], np.float32),
+                                  sh)
+            members = jax.device_put(np.asarray(tree["members"], np.int32),
+                                     sh)
+        meta = tree["meta"]
+        return cls(centroids=cent, members=members,
+                   counts=np.asarray(tree["counts"], np.int32),
+                   n_clusters=int(np.asarray(meta["n_clusters"])),
+                   cap=int(np.asarray(meta["cap"])),
+                   nprobe=int(np.asarray(meta["nprobe"])),
+                   iters=int(np.asarray(meta["iters"])),
+                   model_axis=model_axis,
+                   version=tuple(int(x) for x in np.asarray(meta["version"])))

@@ -427,6 +427,54 @@ def make_feature_serve_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
     return jax.jit(step, donate_argnums=(3,)) if donate else jax.jit(step)
 
 
+def make_feature_ivf_serve_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
+                                par: ParallelConfig, mesh, top_k: int, *,
+                                nprobe: int,
+                                head: Optional["SoftmaxHead"] = None,
+                                donate: bool = True):
+    """Zoo sublinear top-k through an ``IVFIndex`` (mirrors
+    ``make_feature_serve_step``'s top-k contract): ``(params, head_params,
+    head_aux, centroids [P, C, D], members [P, C, cap], queries [b_pad, D],
+    n_queries) -> (vals [b_pad, k], gids [b_pad, k])``. Each vocab shard
+    probes its ``nprobe`` nearest centroids and reranks only their member
+    rows (``serve_topk_ivf_batched_local``; pallas backend = the fused
+    ``ops.ivf_rerank`` kernel). W-heads only."""
+    from repro.api.heads import make_head
+    from repro.core.sharded_softmax import (_normalize,
+                                            serve_topk_ivf_batched_local)
+    head = head or make_head(model_cfg, head_cfg)
+    if not head.params_are_class_weights:
+        raise NotImplementedError(
+            f"top-k serving retrieves against the [V, D] class matrix, "
+            f"which the {head.name!r} head does not train; use a W-head "
+            f"(full/knn/selective/sampled)")
+    maxis, _, _ = vocab_axes(par)
+    hp_spec = head.params_spec(maxis)
+
+    def body(hp_loc, cent, members, queries, n_queries):
+        f = queries.astype(jnp.float32)
+        w = hp_loc.astype(jnp.float32)
+        if head_cfg.cosine_scale > 0:
+            f, w = _normalize(f), _normalize(w)
+        return serve_topk_ivf_batched_local(
+            f, w, cent[0], members[0], top_k, nprobe, n_queries,
+            model_axis=maxis, backend=head.backend, block_a=head.block_a)
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(hp_spec, P(maxis, None, None),
+                                 P(maxis, None, None), P(), P()),
+                       out_specs=P(), check_vma=False)
+
+    def step(params, head_params, head_aux, centroids, members, queries,
+             n_queries):
+        del head_aux
+        hp = (lm.head_weight(params, model_cfg)
+              if head.params_are_class_weights else head_params)
+        return fn(hp, centroids, members, queries, n_queries)
+
+    return jax.jit(step, donate_argnums=(5,)) if donate else jax.jit(step)
+
+
 def make_train_step(model_cfg: ModelConfig, head_cfg: HeadConfig,
                     par: ParallelConfig, train_cfg: TrainConfig, mesh,
                     shape: InputShape, *, use_knn: bool = False,

@@ -397,6 +397,59 @@ def make_batched_topk_serve_step(model_cfg: ModelConfig,
                                    body, donate)
 
 
+def make_batched_ivf_topk_serve_step(model_cfg: ModelConfig,
+                                     head_cfg: HeadConfig, mesh,
+                                     state_template: HybridState,
+                                     top_k: int, *, nprobe: int,
+                                     head: Optional[SoftmaxHead] = None,
+                                     donate: bool = True):
+    """Sublinear serving-tier top-k through an ``IVFIndex``.
+
+    (state, centroids [P, C, D], members [P, C, cap], queries [b_pad, ...],
+    n_queries []) -> (vals [b_pad, k] desc, gids [b_pad, k]), padding rows
+    forced to (-inf, -1). Same contract and shard_map wiring as
+    ``make_batched_topk_serve_step``, but each shard probes its own
+    ``nprobe`` centroids and reranks only their member rows
+    (``serve_topk_ivf_batched_local``; pallas backend = the fused
+    ``ops.ivf_rerank`` kernel) instead of scanning the whole [V/n, D]
+    shard. W-heads only — the index quantizes the trained class matrix."""
+    from repro.core.sharded_softmax import (_normalize,
+                                            serve_topk_ivf_batched_local)
+
+    head = head or make_head(model_cfg, head_cfg)
+    if not head.params_are_class_weights:
+        raise NotImplementedError(
+            f"top-k serving retrieves against the [V, D] class matrix, "
+            f"which the {head.name!r} head does not train; use a W-head "
+            f"(full/knn/selective/sampled)")
+    key = _serve_query_key(model_cfg)
+    specs = state_specs(state_template, head)
+
+    def body(fe_params, head_params, head_aux, cent, members, queries,
+             n_queries):
+        f = _flat_features(model_cfg, fe_params, {key: queries})
+        f = f.astype(jnp.float32)
+        w = head_params.astype(jnp.float32)
+        if head_cfg.cosine_scale > 0:
+            f, w = _normalize(f), _normalize(w)
+        return serve_topk_ivf_batched_local(
+            f, w, cent[0], members[0], top_k, nprobe, n_queries,
+            model_axis=AXIS, backend=head.backend,
+            block_a=head.block_a)
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(specs.fe_params, specs.head_params,
+                                 specs.head_aux, P(AXIS, None, None),
+                                 P(AXIS, None, None), P(), P()),
+                       out_specs=P(), check_vma=False)
+
+    def step(state, centroids, members, queries, n_queries):
+        return fn(state.fe_params, state.head_params, state.head_aux,
+                  centroids, members, queries, n_queries)
+
+    return jax.jit(step, donate_argnums=(3,)) if donate else jax.jit(step)
+
+
 def make_topk_serve_step(model_cfg: ModelConfig, head_cfg: HeadConfig, mesh,
                          state_template: HybridState, top_k: int, *,
                          head: Optional[SoftmaxHead] = None):

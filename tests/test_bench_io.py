@@ -12,7 +12,8 @@ import os
 
 import pytest
 
-from benchmarks.common import BENCH_SCHEMA, REPO_ROOT, write_bench
+from benchmarks.common import (BENCH_SCHEMA, REPO_ROOT, check_regression,
+                               comparable, git_rev, write_bench)
 
 
 def test_schema_bump_keeps_legacy_records_verbatim(tmp_path):
@@ -50,6 +51,57 @@ def test_append_to_non_array_raises_and_preserves_it(tmp_path):
     with pytest.raises(ValueError, match="trajectory"):
         write_bench("y", {}, root=str(tmp_path))
     assert json.loads(p.read_text()) == {"not": "a list"}
+
+
+def test_records_stamp_git_rev(tmp_path):
+    """Every appended record carries the short SHA of the tree it ran in
+    (with ``-dirty`` when the checkout is modified) for traceability."""
+    rev = git_rev()
+    assert rev == "unknown" or 4 <= len(rev.replace("-dirty", "")) <= 40
+    assert git_rev(root=str(tmp_path)) == "unknown"   # not a git checkout
+    write_bench("g", {}, root=str(tmp_path))
+    (rec,) = json.loads((tmp_path / "BENCH_g.json").read_text())
+    assert rec["git_rev"] == rev
+
+
+def _rec(payload, platform="cpu", n=8):
+    return {"platform": platform, "n_devices": n, "payload": payload}
+
+
+def test_comparable_requires_same_environment_and_config():
+    a = _rec({"quick": False, "config": {"classes": 4096}})
+    assert comparable(a, _rec({"quick": False, "config": {"classes": 4096}}))
+    assert not comparable(a, _rec({"quick": True,
+                                   "config": {"classes": 4096}}))
+    assert not comparable(a, _rec({"quick": False,
+                                   "config": {"classes": 256}}))
+    assert not comparable(a, _rec(a["payload"], platform="tpu"))
+    assert not comparable(a, _rec(a["payload"], n=16))
+
+
+def test_check_regression_directions_and_threshold():
+    prev = _rec({"p99_ms": 10.0, "qps": 100.0, "legs": {"a": 1.0, "b": 2.0}})
+    metrics = {"p99_ms": "lower", "qps": "higher", "legs.*": "lower"}
+    # within tolerance both ways
+    ok = _rec({"p99_ms": 12.0, "qps": 90.0, "legs": {"a": 1.1, "b": 1.0}})
+    assert check_regression(prev, ok, metrics, threshold=0.25) == []
+    # cost grew / score shrank beyond tolerance
+    bad = _rec({"p99_ms": 20.0, "qps": 50.0, "legs": {"a": 2.0, "b": 2.0}})
+    fails = check_regression(prev, bad, metrics, threshold=0.25)
+    assert len(fails) == 3
+    assert any("p99_ms" in f for f in fails)
+    assert any("qps" in f for f in fails)
+    assert any("legs.a" in f for f in fails)
+
+
+def test_check_regression_skips_absent_and_degenerate_metrics():
+    """Absent legs, non-numeric values, and <= 0 baselines must not fail
+    the gate — a benchmark that grew a new leg stays comparable."""
+    prev = _rec({"p99_ms": 0.0, "note": "warm"})
+    new = _rec({"p99_ms": 99.0, "note": "cold", "fresh_leg": 1.0})
+    metrics = {"p99_ms": "lower", "note": "lower", "fresh_leg": "lower",
+               "missing.deep": "higher"}
+    assert check_regression(prev, new, metrics) == []
 
 
 @pytest.mark.parametrize("fname", ["BENCH_serve.json", "BENCH_table3.json"])

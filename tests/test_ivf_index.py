@@ -1,0 +1,278 @@
+"""IVF serving-index tests: recall vs exact at the default nprobe,
+bit-for-bit exactness at nprobe == n_clusters (both systems), ref-vs-pallas
+rerank parity (kernel- and engine-level), the checkpoint round-trip /
+weights_version lifecycle, and the facade argument validation."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.api import Experiment
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import HeadConfig
+from repro.kernels import ops
+from repro.serving import IVFIndex
+from repro.serving.index import default_n_clusters, default_nprobe
+from repro.train import hybrid
+
+W_HEADS = ["full", "knn", "selective", "sampled"]
+
+
+def _head_cfg(impl, backend="ref"):
+    return HeadConfig(softmax_impl=impl, backend=backend, active_frac=0.5,
+                      knn_k=8, knn_kprime=16, sampled_n=64)
+
+
+def _paper_exp(mesh, classes, feat_dim, head="full", backend="ref",
+               batch=32, **kw):
+    return Experiment.from_config(
+        system="paper", classes=classes, feat_dim=feat_dim, batch=batch,
+        mesh=mesh, head=_head_cfg(head, backend), log_every=0, **kw)
+
+
+def _install_clustered_weights(exp, classes, feat_dim, *, offset=0.3,
+                               seed=0):
+    """Install tight clustered class weights (a converged-cosine-head
+    stand-in — the quantizer needs cluster structure to index) and return
+    the [classes, feat_dim] prototype matrix."""
+    rng = np.random.default_rng(seed)
+    n_cent = max(2, classes // 64)
+    centers = rng.standard_normal((n_cent, feat_dim)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    protos = (centers[rng.integers(0, n_cent, classes)]
+              + rng.standard_normal((classes, feat_dim)).astype(np.float32)
+              * (offset / np.sqrt(feat_dim)))
+    protos /= np.linalg.norm(protos, axis=1, keepdims=True)
+    protos = protos.astype(np.float32)
+    v_pad = exp.state.head_params.shape[0]
+    w_host = (np.pad(protos, ((0, v_pad - classes), (0, 0)))
+              if v_pad != classes else protos)
+    # head_params is uncommitted: device_put with the MESH sharding (the
+    # state array's own sharding would commit to one device)
+    w = jax.device_put(w_host, NamedSharding(exp.mesh, P(hybrid.AXIS, None)))
+    exp.trainer.state = exp.trainer.state._replace(head_params=w)
+    return protos
+
+
+def _query_pool(protos, n, *, noise=0.1, seed=1):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, protos.shape[0], n)
+    d = protos.shape[1]
+    return (protos[labels]
+            + rng.standard_normal((n, d)).astype(np.float32)
+            * (noise / np.sqrt(d))).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# defaults + fit invariants
+# ---------------------------------------------------------------------------
+
+
+def test_defaults():
+    assert default_n_clusters(4096) == 64
+    assert default_n_clusters(1) == 1
+    assert default_nprobe(64) == 2          # C/32 floor-ed at 2 probes
+    assert default_nprobe(1) == 2           # resolve_nprobe clamps to C
+    assert default_nprobe(320) == 10
+
+
+def test_fit_packs_every_valid_row_once(mesh8):
+    exp = _paper_exp(mesh8, classes=256, feat_dim=16)
+    idx = exp.ivf_index(refit=True)
+    v_loc = exp.state.head_params.shape[0] // 8
+    assert idx.cap == -(-(5 * v_loc) // (4 * idx.n_clusters))
+    assert int(idx.counts.sum()) == 256     # every valid row, exactly once
+    m = np.asarray(jax.device_get(idx.members))
+    for s in range(m.shape[0]):
+        rows = m[s][m[s] >= 0]
+        assert rows.size == np.unique(rows).size
+    assert idx.resolve_nprobe() == min(2, idx.n_clusters)
+    assert idx.resolve_nprobe(10 ** 9) == idx.n_clusters
+    assert idx.resolve_nprobe(1) == 1
+
+
+# ---------------------------------------------------------------------------
+# retrieval quality
+# ---------------------------------------------------------------------------
+
+
+def test_recall_at_default_nprobe(mesh8):
+    """recall@5 >= 0.95 vs the exact scan at the DEFAULT nprobe, on
+    clustered weights + near-prototype queries (deterministic seeds)."""
+    classes, d, mb, pool, k = 2048, 32, 32, 128, 5
+    exp = _paper_exp(mesh8, classes=classes, feat_dim=d, batch=mb)
+    protos = _install_clustered_weights(exp, classes, d)
+    q = _query_pool(protos, pool)
+    exact = exp.serving_engine(top_k=k, max_batch=mb, max_wait_ms=0.0,
+                               cache=None)
+    ivf = exp.serving_engine(top_k=k, max_batch=mb, max_wait_ms=0.0,
+                             cache=None, index="ivf")
+    recalls = []
+    for b in range(0, pool, mb):
+        ids_e = np.asarray(exact.step_fn(q[b:b + mb], mb)[0])
+        ids_i = np.asarray(ivf.step_fn(q[b:b + mb], mb)[0])
+        recalls += [len(set(ids_e[i]) & set(ids_i[i])) / k
+                    for i in range(mb)]
+    assert np.mean(recalls) >= 0.95
+
+
+def test_nprobe_full_is_exact_paper(mesh8):
+    """nprobe == n_clusters probes every cell; balanced packing drops no
+    row, so the result is the exact scan bit-for-bit."""
+    exp = _paper_exp(mesh8, classes=256, feat_dim=16, batch=8)
+    idx = exp.ivf_index(refit=True)
+    ids_e, sc_e = exp.serve(batch=8, top_k=5, return_scores=True)
+    ids_i, sc_i = exp.serve(batch=8, top_k=5, return_scores=True,
+                            index="ivf", nprobe=idx.n_clusters)
+    np.testing.assert_array_equal(np.asarray(ids_e), np.asarray(ids_i))
+    # scores agree to float accumulation order (gather+matvec vs gemm)
+    np.testing.assert_allclose(np.asarray(sc_e), np.asarray(sc_i),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_nprobe_full_is_exact_zoo():
+    exp = Experiment.from_config(
+        system="zoo", arch="smollm_135m", reduced=True, batch=4, seq=32,
+        head=_head_cfg("full"))
+    idx = exp.ivf_index(refit=True)
+    q = np.random.default_rng(0).standard_normal(
+        (4, exp.model_cfg.d_model)).astype(np.float32)
+    ids_e, sc_e = exp.serve(top_k=5, queries=q, return_scores=True)
+    ids_i, sc_i = exp.serve(top_k=5, queries=q, return_scores=True,
+                            index="ivf", nprobe=idx.n_clusters)
+    np.testing.assert_array_equal(np.asarray(ids_e), np.asarray(ids_i))
+    np.testing.assert_allclose(np.asarray(sc_e), np.asarray(sc_i),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ref-vs-pallas rerank parity
+# ---------------------------------------------------------------------------
+
+
+def test_ivf_rerank_kernel_matches_ref():
+    """ops.ivf_rerank == gather + lax.top_k, including -1 pad slots and a
+    row whose candidate list is shorter than k (pads with id -1)."""
+    rng = np.random.default_rng(0)
+    b, v, d, a, k = 4, 64, 8, 12, 5
+    f = rng.standard_normal((b, d)).astype(np.float32)
+    w = rng.standard_normal((v, d)).astype(np.float32)
+    cand = rng.integers(0, v, (b, a)).astype(np.int32)
+    cand[0, 7:] = -1                        # padded row
+    cand[1, 3:] = -1                        # fewer candidates than k
+    vals, ids = ops.ivf_rerank(f, w, cand, k)
+    vals, ids = np.asarray(vals), np.asarray(ids)
+    for i in range(b):
+        live = cand[i][cand[i] >= 0]
+        sc = f[i] @ w[live].T
+        order = np.argsort(-sc, kind="stable")[:k]
+        np.testing.assert_allclose(vals[i][:live.size], sc[order],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(ids[i][:live.size], live[order])
+        assert (ids[i][live.size:] == -1).all()
+
+
+@pytest.mark.parametrize("head", W_HEADS)
+def test_engine_backend_parity(mesh8, head):
+    """The engine's IVF step returns identical ids for the ref and pallas
+    rerank backends, for every W-head."""
+    classes, d, mb = 256, 16, 8
+    ids = {}
+    for backend in ("ref", "pallas"):
+        exp = _paper_exp(mesh8, classes=classes, feat_dim=d, head=head,
+                         backend=backend, batch=mb)
+        protos = _install_clustered_weights(exp, classes, d)
+        q = _query_pool(protos, mb)
+        eng = exp.serving_engine(top_k=3, max_batch=mb, max_wait_ms=0.0,
+                                 cache=None, index="ivf")
+        out_ids, out_vals = eng.step_fn(q, mb)
+        ids[backend] = np.asarray(out_ids)
+        vals = np.asarray(out_vals)
+        assert ids[backend].shape == (mb, 3) and vals.shape == (mb, 3)
+    np.testing.assert_array_equal(ids["ref"], ids["pallas"])
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: checkpoint round-trip, version invalidation, refit
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_bitwise(mesh8, tmp_path):
+    """state_to_save -> repro.checkpoint -> state_from_restore reproduces
+    the index bitwise, and a restored index is installable (no refit)."""
+    exp = _paper_exp(mesh8, classes=256, feat_dim=16, batch=8)
+    idx = exp.ivf_index(refit=True)
+    ckpt.save(str(tmp_path / "ivf"), idx.state_to_save(), step=0)
+    tree, step = ckpt.restore(str(tmp_path / "ivf"), idx.state_to_save(),
+                              step=0)
+    assert step == 0
+    back = IVFIndex.state_from_restore(tree, exp.mesh,
+                                       model_axis=hybrid.AXIS)
+    np.testing.assert_array_equal(np.asarray(jax.device_get(back.centroids)),
+                                  np.asarray(jax.device_get(idx.centroids)))
+    np.testing.assert_array_equal(np.asarray(jax.device_get(back.members)),
+                                  np.asarray(jax.device_get(idx.members)))
+    np.testing.assert_array_equal(back.counts, idx.counts)
+    assert (back.n_clusters, back.cap, back.nprobe, back.iters,
+            back.version) == (idx.n_clusters, idx.cap, idx.nprobe,
+                              idx.iters, idx.version)
+    exp.install_ivf_index(back)
+    assert exp.ivf_index() is back          # fresh version -> no refit
+    ids_a, _ = exp.serve(batch=8, top_k=3, return_scores=True, index="ivf")
+    exp.install_ivf_index(idx)
+    ids_b, _ = exp.serve(batch=8, top_k=3, return_scores=True, index="ivf")
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+
+
+def test_refit_when_weights_version_moves(mesh8):
+    exp = _paper_exp(mesh8, classes=256, feat_dim=16, batch=8)
+    idx = exp.ivf_index()
+    assert exp.ivf_index() is idx           # cached while version holds
+    exp.fit(1, use_fccs_batch=False)
+    idx2 = exp.ivf_index()
+    assert idx2 is not idx                  # train step -> version moved
+    assert idx2.version == tuple(exp.weights_version)
+    assert exp.ivf_index(refit=True) is not idx2
+
+
+def test_stale_index_not_served(mesh8):
+    """The engine's step builder refits through exp.ivf_index(), so a
+    serve after a train step never uses the stale index's version."""
+    exp = _paper_exp(mesh8, classes=256, feat_dim=16, batch=8)
+    exp.ivf_index()
+    exp.fit(1, use_fccs_batch=False)
+    exp.serve(batch=8, top_k=3, index="ivf")
+    assert exp._ivf.version == tuple(exp.weights_version)
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_index_requires_topk(mesh8):
+    exp = _paper_exp(mesh8, classes=256, feat_dim=16, batch=8)
+    with pytest.raises(ValueError, match="top-k"):
+        exp.serve(batch=8, index="ivf")
+    with pytest.raises(ValueError, match="unknown serving index"):
+        exp.serve(batch=8, top_k=3, index="lsh")
+
+
+def test_sketch_head_refused(mesh8):
+    exp = _paper_exp(mesh8, classes=256, feat_dim=16, head="mach", batch=8)
+    with pytest.raises(NotImplementedError, match="class matrix"):
+        exp.ivf_index()
+
+
+def test_restored_index_replaces_unfit(mesh8):
+    """install_ivf_index on a fresh experiment (never fit) is the resumed-
+    server path: serve uses the installed index without refitting."""
+    exp = _paper_exp(mesh8, classes=256, feat_dim=16, batch=8)
+    idx = exp.ivf_index(refit=True)
+    exp2 = _paper_exp(mesh8, classes=256, feat_dim=16, batch=8)
+    moved = dataclasses.replace(idx, version=tuple(exp2.weights_version))
+    exp2.install_ivf_index(moved)
+    assert exp2.ivf_index() is moved
