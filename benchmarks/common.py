@@ -25,6 +25,17 @@ import jax
 BENCH_SCHEMA = 1
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# process-wide override for where ``write_bench`` appends records (None =
+# REPO_ROOT). ``benchmarks/run.py --bench-root`` sets this so pre-merge
+# gate runs (scripts/smoke.sh) keep fresh records out of the committed
+# trajectory files while still comparing against them.
+BENCH_ROOT = None
+
+
+def set_bench_root(path) -> None:
+    global BENCH_ROOT
+    BENCH_ROOT = path
+
 
 def git_rev(root: str = None) -> str:
     """Short git SHA of the tree the benchmark ran in, with a ``-dirty``
@@ -68,7 +79,8 @@ def write_bench(name: str, payload: dict, *, root: str = None) -> str:
     ``payload`` is the benchmark's own result dict (must be
     JSON-serializable). Returns the file path. Records are never
     rewritten — the file is the trajectory, one record per run."""
-    path = os.path.join(root or REPO_ROOT, f"BENCH_{name}.json")
+    path = os.path.join(root or BENCH_ROOT or REPO_ROOT,
+                        f"BENCH_{name}.json")
     records = []
     if os.path.exists(path):
         with open(path) as f:

@@ -33,26 +33,42 @@ CHECK_METRICS = {
         "step_s.*": "lower",
         "backend_step_s.*": "lower",
     },
+    "table8": {
+        "throughput_sps.*": "higher",
+    },
 }
 
 
-def _check_table(name: str, threshold: float) -> list:
+def _check_table(name: str, threshold: float, bench_root: str = "") -> list:
     """Compare the just-written record of BENCH_<name>.json against the
-    most recent comparable prior record. Returns failure strings."""
+    most recent comparable prior record. With ``bench_root`` set (gate
+    mode), the fresh record lives in the bench-root copy of the file and
+    the baseline is searched in the COMMITTED repo-root trajectory.
+    Returns failure strings."""
     from benchmarks.common import REPO_ROOT, check_regression, comparable
     metrics = CHECK_METRICS.get(name)
     if not metrics:
         return []
-    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
-    if not os.path.exists(path):
+    fresh_path = os.path.join(bench_root or REPO_ROOT, f"BENCH_{name}.json")
+    if not os.path.exists(fresh_path):
         return []
-    with open(path) as f:
+    with open(fresh_path) as f:
         records = json.load(f)
-    if len(records) < 2:
-        print(f"{name}/CHECK,0.0,no prior record to compare against")
-        return []
-    fresh = records[-1]
-    for prev in reversed(records[:-1]):
+    if bench_root:
+        fresh = records[-1]
+        base_path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+        if not os.path.exists(base_path):
+            print(f"{name}/CHECK,0.0,no committed trajectory to compare "
+                  f"against")
+            return []
+        with open(base_path) as f:
+            baselines = json.load(f)
+    else:
+        if len(records) < 2:
+            print(f"{name}/CHECK,0.0,no prior record to compare against")
+            return []
+        fresh, baselines = records[-1], records[:-1]
+    for prev in reversed(baselines):
         if comparable(prev, fresh):
             fails = check_regression(prev, fresh, metrics,
                                      threshold=threshold)
@@ -78,12 +94,22 @@ def main(argv=None):
                         "comparable committed BENCH record")
     p.add_argument("--check-threshold", type=float, default=0.25,
                    help="relative regression tolerance for --check")
+    p.add_argument("--bench-root", default="", metavar="DIR",
+                   help="append fresh BENCH records under DIR instead of "
+                        "the repo root; --check then gates them against "
+                        "the committed repo-root trajectories (pre-merge "
+                        "mode, used by scripts/smoke.sh)")
     args = p.parse_args(argv)
     if args.check_threshold <= 0:
         p.error(f"--check-threshold must be > 0, got {args.check_threshold}")
+    if args.bench_root and not os.path.isdir(args.bench_root):
+        p.error(f"--bench-root {args.bench_root} is not a directory")
     # 8 fake devices for the hybrid-parallel benchmarks (before jax import)
     os.environ.setdefault(
         "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    if args.bench_root:
+        from benchmarks.common import set_bench_root
+        set_bench_root(args.bench_root)
 
     from benchmarks import (serve_replay, table2_knn_accuracy,
                             table3_knn_throughput, table4_comm,
@@ -111,7 +137,8 @@ def main(argv=None):
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
             raise
         if args.check:
-            regressions += _check_table(name, args.check_threshold)
+            regressions += _check_table(name, args.check_threshold,
+                                        args.bench_root)
     if regressions:
         print(f"check/FAILED,0.0,{len(regressions)} metric(s) regressed "
               f"beyond {args.check_threshold:.0%}", file=sys.stderr)

@@ -6,6 +6,12 @@ reports (a) measured step times for the three configurations and (b) the
 paper-style model: per-step wire bytes from the trainer's own accounting,
 converted to comm seconds on the paper's 25 Gbit network and combined with
 the measured compute time — the same accounting the paper's table reflects.
+
+The wire-byte accounting is now AUDITED against the compiled step: the
+analytic ``repro.telemetry`` comm ledger charges the softmax-completion
+collectives, the remainder of the compiled HLO's all-reduce bytes is the
+gradient exchange, and the run FAILS LOUDLY when that measured exchange
+diverges from the trainer's own ``comm_dense_bytes`` metric by >10%.
 """
 from __future__ import annotations
 
@@ -16,10 +22,13 @@ import jax
 from benchmarks.common import row, timeit
 from repro.configs.base import DGCConfig, HeadConfig, TrainConfig
 from repro.data.synthetic import lm_batch
+from repro.roofline.hlo import analyze as hlo_analyze
+from repro.telemetry import train_step_ledger
 from repro.train import hybrid
 from tests.conftest import reduced_cfg
 
 NET_BYTES_PER_S = 25e9 / 8  # paper: 25 Gbit Ethernet
+LEDGER_RTOL = 0.10          # measured-vs-accounted divergence that FAILS
 
 
 def run(quick: bool = False):
@@ -52,6 +61,42 @@ def run(quick: bool = False):
             out[name] = {"t": t, "wire": wire}
             row(f"table4/{name}_measured", t * 1e6,
                 f"wire_bytes={wire:.0f}")
+
+            # audit the accounting against the compiled step: the analytic
+            # repro.telemetry ledger charges the softmax-completion terms;
+            # the remainder of the HLO's all-reduce bytes IS the gradient
+            # exchange, and it must agree with the trainer's own
+            # comm_dense_bytes metric
+            fe_param_count = sum(
+                leaf.size for leaf in jax.tree.leaves(state.fe_params))
+            led = train_step_ledger(
+                n_dev=8, rows=B * S, feat_dim=cfg.d_model, head="full",
+                backend="ref", n_micro=v["n_micro"],
+                fe_param_count=fe_param_count)
+            coll = hlo_analyze(
+                step.lower(state, inputs, 0.1).compile().as_text()
+            ).collectives
+            ce_bytes = sum(e.bytes for e in led.entries
+                           if e.kind == "all-reduce"
+                           and e.label != "fe_grad_exchange")
+            measured = coll.get("all-reduce", {}).get("bytes", 0.0) - ce_bytes
+            dense = float(metrics["comm_dense_bytes"])
+            rel = abs(measured - dense) / max(measured, dense, 1.0)
+            out[name]["exchange_bytes_measured"] = measured
+            out[name]["exchange_bytes_accounted"] = dense
+            row(f"table4/{name}_ledger", 0.0,
+                f"exchange_measured={measured:.0f} accounted={dense:.0f} "
+                f"rel={rel:.1%} ledger_total={led.total_bytes():.0f}")
+            if rel > LEDGER_RTOL:
+                raise RuntimeError(
+                    f"table4/{name}: measured gradient-exchange bytes "
+                    f"{measured:.0f} diverge from the trainer's accounting "
+                    f"{dense:.0f} by {rel:.1%} (> {LEDGER_RTOL:.0%})")
+            divergence = led.compare(coll, rtol=LEDGER_RTOL)
+            if divergence:
+                raise RuntimeError(
+                    f"table4/{name}: comm ledger vs compiled HLO: "
+                    f"{divergence}")
 
     # paper-regime projection. CPU fake devices can't exhibit async-ICI
     # overlap, so we model the paper's cluster: comm is ~15% of a step for

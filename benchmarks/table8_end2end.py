@@ -1,21 +1,69 @@
-"""Paper Fig. 8 / Table 8: the composed system.
+"""Paper Fig. 8 / Table 8: the composed system, end to end.
 
 Stacks the methods cumulatively — full softmax baseline -> +KNN softmax ->
 +overlap (micro-batch pipeline) -> +sparsification -> +FCCS — and reports
 step wall-clock, throughput, and final accuracy, mirroring the paper's
 "3.9x throughput, 45 -> 5 days, comparable accuracy" composition.
+
+This is also the simulated-100M end-to-end dry run (ROADMAP): for every
+head x backend it shape-lowers the hybrid train step at the benchmark's
+class count AND at the simulated paper scale (2**20 quick / 10**8 full)
+via ``repro.launch.dryrun.lower_paper_one`` — no state materialized — and
+reports peak memory plus comm volume per step, with the analytic
+``repro.telemetry`` comm ledger cross-checked against the compiled HLO.
+The whole payload is appended to ``BENCH_table8.json`` — the repo's first
+training-side perf trajectory (gated by ``benchmarks/run.py --check``).
+
+  PYTHONPATH=src:. python benchmarks/table8_end2end.py --quick
 """
 from __future__ import annotations
 
+if __name__ == "__main__":
+    # standalone bootstrap (run.py does this for the driver path): 8 fake
+    # host devices BEFORE jax initializes, src/ + repo root on sys.path
+    import os
+    import sys
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [os.path.join(_root, "src"), _root]
+
+import argparse
+
 import jax
 
-from benchmarks.common import row, timeit
+from benchmarks.common import row, timeit, write_bench
 from repro.api.heads import make_head
 from repro.configs.base import (DGCConfig, FCCSConfig, HeadConfig,
                                 ModelConfig, TrainConfig)
 from repro.data.synthetic import ClassificationStream, sku_feature_batch
+from repro.launch.dryrun import lower_paper_one
 from repro.train import hybrid
 from repro.train.trainer import PaperTrainer
+
+SIM_CLASSES_QUICK = 2 ** 20          # simulated "100M" dry-run scale
+SIM_CLASSES_FULL = 10 ** 8
+
+
+def _head_report(classes: int, head: str, backend: str, *, batch: int,
+                 feat_dim: int, n_micro: int = 1) -> dict:
+    """Peak memory + comm volume for one head x backend at ``classes``,
+    from the shape-lowered compiled step (nothing materialized)."""
+    r = lower_paper_one(classes=classes, head=head, backend=backend,
+                        batch=batch, feat_dim=feat_dim, n_micro=n_micro)
+    measured = r["collectives"].get("total_bytes", 0.0)
+    return {
+        "classes": classes,
+        "peak_bytes": (r["memory"]["peak_bytes"]
+                       or r["memory"]["argument_bytes"]
+                       + r["memory"]["temp_bytes"]),
+        "argument_bytes": r["memory"]["argument_bytes"],
+        "temp_bytes": r["memory"]["temp_bytes"],
+        "comm_bytes_per_step": r["ledger"]["total_bytes"],
+        "comm_bytes_measured_hlo": measured,
+        "ledger_divergence": r["ledger_divergence"],
+        "compile_s": r["compile_s"],
+    }
 
 
 def run(quick: bool = False):
@@ -33,6 +81,8 @@ def run(quick: bool = False):
         ("plus_sparsify", dict(knn=True, n_micro=4, dgc=True)),
     ]
     base_t = None
+    stage_out = {}
+    throughput = {}
     with jax.set_mesh(mesh):
         for name, s in stages:
             hcfg = HeadConfig(softmax_impl="knn" if s["knn"] else "full",
@@ -50,8 +100,44 @@ def run(quick: bool = False):
             t = timeit(lambda: step(state, inputs, 1.0),
                        n=5 if quick else 10)
             base_t = base_t or t
+            stage_out[name] = {"step_s": t, "throughput_sps": B / t,
+                               "speedup": base_t / t}
+            throughput[name] = B / t
             row(f"table8/{name}", t * 1e6,
                 f"throughput={B / t:.0f}/s speedup={base_t / t:.2f}x")
+
+    # per-head x backend: peak memory + comm volume from the compiled step
+    # at the benchmark scale, ledger cross-checked against HLO
+    heads = {}
+    for h in ("full", "knn"):
+        for bk in ("ref", "pallas"):
+            rep = _head_report(N, h, bk, batch=B, feat_dim=D)
+            key = f"{h}_{bk}"
+            # measured wall-clock throughput exists for the timed (ref)
+            # stages; pallas legs are lowered/analyzed only
+            rep["throughput_sps"] = (throughput.get(
+                "baseline_full" if h == "full" else "plus_knn")
+                if bk == "ref" else None)
+            heads[key] = rep
+            if rep["ledger_divergence"]:
+                raise RuntimeError(
+                    f"table8 comm ledger diverged from compiled HLO for "
+                    f"{key}: {rep['ledger_divergence']}")
+            row(f"table8/head_{key}", 0.0,
+                f"peak_bytes={rep['peak_bytes']} "
+                f"comm_bytes_per_step={rep['comm_bytes_per_step']:.0f} "
+                f"(hlo {rep['comm_bytes_measured_hlo']:.0f})")
+
+    # simulated-100M dry run: same heads, paper scale, shape-only
+    sim_classes = SIM_CLASSES_QUICK if quick else SIM_CLASSES_FULL
+    sim = {"classes": sim_classes}
+    for h in ("full", "knn"):
+        rep = _head_report(sim_classes, h, "ref", batch=B, feat_dim=D)
+        sim[h] = rep
+        row(f"table8/sim100m_{h}", 0.0,
+            f"classes={sim_classes} peak_bytes={rep['peak_bytes']} "
+            f"comm_bytes_per_step={rep['comm_bytes_per_step']:.0f} "
+            f"compile_s={rep['compile_s']:.1f}")
 
     # FCCS epoch reduction (paper: 20 -> 8 epochs == 2.5x fewer iterations)
     hcfg = HeadConfig(softmax_impl="knn", knn_k=16, knn_kprime=32,
@@ -70,8 +156,25 @@ def run(quick: bool = False):
     row("table8/fccs_final", 0.0,
         f"accuracy={acc:.4f} steps={steps} equiv_const_batch_steps="
         f"{equiv_steps} iteration_reduction={equiv_steps / steps:.2f}x")
-    return acc
+
+    payload = {
+        "quick": quick,
+        "config": {"N": N, "D": D, "B": B, "n_dev": 8,
+                   "sim_classes": sim_classes},
+        "stages": stage_out,
+        "throughput_sps": throughput,
+        "heads": heads,
+        "sim100m": sim,
+        "fccs": {"accuracy": acc, "steps": steps,
+                 "equiv_const_batch_steps": equiv_steps,
+                 "iteration_reduction": equiv_steps / steps},
+    }
+    path = write_bench("table8", payload)
+    row("table8/bench_written", 0.0, path)
+    return payload
 
 
 if __name__ == "__main__":
-    run(quick=True)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

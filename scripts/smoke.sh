@@ -89,6 +89,36 @@ for rec in records:
 print("BENCH_serve.json: p99 + cache hit-rate fields OK")
 EOF
 
+# perf regression gate (benchmarks/run.py --check): fresh quick records go
+# under $BENCH_TMP and are compared against the committed repo-root
+# BENCH_*.json trajectories. The table3 leg runs with telemetry disabled at
+# a 2% threshold — it is the proof that the tracing seam costs the hot
+# path ~nothing; serve runs at the default 25% wall-clock tolerance.
+echo "=== perf gate / table3 + serve vs committed BENCH records ==="
+PYTHONPATH=src:. python -m benchmarks.run --quick --only table3 --check \
+    --check-threshold 0.02 --bench-root "$BENCH_TMP"
+PYTHONPATH=src:. python -m benchmarks.run --quick --only serve --check \
+    --bench-root "$BENCH_TMP"
+
+# telemetry leg (docs/telemetry.md): a tiny traced run must emit a
+# Chrome-trace whose train.step span count matches the steps run, plus one
+# JSONL metrics row per step
+echo "=== telemetry / trace + metrics emission ==="
+python -m repro.launch.train --system paper --devices 8 --head full \
+    --classes 256 --steps 5 --batch 16 \
+    --trace-out "$BENCH_TMP/trace.json" \
+    --metrics-out "$BENCH_TMP/metrics.jsonl"
+python - "$BENCH_TMP" <<'EOF'
+import json, sys
+trace = json.load(open(sys.argv[1] + "/trace.json"))
+steps = [e for e in trace["traceEvents"] if e["name"] == "train.step"]
+assert len(steps) == 5, f"expected 5 train.step spans, got {len(steps)}"
+assert trace["counters"]["train.steps"] == 5.0, trace["counters"]
+rows = [json.loads(l) for l in open(sys.argv[1] + "/metrics.jsonl")]
+assert len(rows) == 5, f"expected 5 metrics rows, got {len(rows)}"
+print("telemetry: trace parses, 5 train.step spans, 5 metrics rows OK")
+EOF
+
 # IVF serving index: full + knn heads through the ref AND pallas rerank
 # backends on a tiny config — recall vs the exact scan at the default
 # nprobe, and bitwise id equality when every cell is probed

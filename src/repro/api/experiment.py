@@ -130,7 +130,7 @@ class PaperExperiment(Experiment):
                  data_fn: Optional[Callable[[int, int], dict]] = None,
                  mesh=None, lr_fn=None, ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 50, ckpt_keep: int = 0,
-                 log_every: int = 10, seed: int = 0):
+                 log_every: int = 10, seed: int = 0, telemetry=None):
         from repro.train import hybrid
         from repro.train.trainer import PaperTrainer
 
@@ -146,7 +146,8 @@ class PaperExperiment(Experiment):
             self.model_cfg, self.head_cfg, self.train_cfg, self.mesh,
             data_fn, hw_batch=batch, lr_fn=lr_fn,
             ckpt_dir=ckpt_dir or None, ckpt_every=ckpt_every,
-            ckpt_keep=ckpt_keep, log_every=log_every, seed=seed)
+            ckpt_keep=ckpt_keep, log_every=log_every, seed=seed,
+            telemetry=telemetry)
         self._serve_step = None
         self._topk_steps: dict = {}
         self._engines: dict = {}
@@ -178,14 +179,18 @@ class PaperExperiment(Experiment):
         return (self.trainer.restores, int(self.trainer.state.step))
 
     def fit(self, steps: int, *, use_fccs_batch: bool = True,
-            resume: bool = False, step_hook=None):
+            resume: bool = False, step_hook=None, telemetry=None):
         """Train. ``steps`` is the number of steps to run from the current
         cursor; with ``resume=True`` the latest checkpoint under
         ``ckpt_dir`` is restored first (if any) and ``steps`` becomes the
         TOTAL step target — a killed 100-step run relaunched with
         ``fit(100, resume=True)`` replays only the lost tail.
         ``step_hook(t)`` fires before each step (fault injection —
-        ``repro.resilience``)."""
+        ``repro.resilience``); ``telemetry=`` installs a
+        ``repro.telemetry.Tracer`` on the trainer for per-phase spans and
+        the JSONL metrics stream (docs/telemetry.md)."""
+        if telemetry is not None:
+            self.trainer.telemetry = telemetry
         if resume:
             self.restore(missing_ok=True)
             steps = steps - self.trainer._t
@@ -217,7 +222,8 @@ class PaperExperiment(Experiment):
 
     def serve(self, inputs=None, *, batch: Optional[int] = None,
               top_k: Optional[int] = None, return_scores: bool = False,
-              index: Optional[str] = None, nprobe: Optional[int] = None):
+              index: Optional[str] = None, nprobe: Optional[int] = None,
+              telemetry=None):
         """Deploy-style retrieval (§4.5): nearest-class (or hashed-vote)
         predictions for a batch of inputs.
 
@@ -257,13 +263,16 @@ class PaperExperiment(Experiment):
                 batch = queries.shape[0]
             return self._serve_via_engine(batch or self.batch, top_k,
                                           return_scores, index=index,
-                                          nprobe=nprobe, queries=queries)
+                                          nprobe=nprobe, queries=queries,
+                                          telemetry=telemetry)
+        from repro.telemetry import NULL_TRACER
+        tr = telemetry or NULL_TRACER
         if top_k is not None:
             if top_k not in self._topk_steps:
                 self._topk_steps[top_k] = hybrid.make_topk_serve_step(
                     self.model_cfg, self.head_cfg, self.mesh, self.state,
                     top_k, head=self.trainer.head)
-            with jax.set_mesh(self.mesh):
+            with jax.set_mesh(self.mesh), tr.span("serve.compute"):
                 vals, ids = jax.device_get(
                     self._topk_steps[top_k](self.state, inputs))
             return (ids, vals) if return_scores else ids
@@ -271,13 +280,14 @@ class PaperExperiment(Experiment):
             self._serve_step = hybrid.make_serve_step(
                 self.model_cfg, self.head_cfg, self.mesh, self.state,
                 head=self.trainer.head)
-        with jax.set_mesh(self.mesh):
+        with jax.set_mesh(self.mesh), tr.span("serve.compute"):
             return jax.device_get(self._serve_step(self.state, inputs))
 
     def _serve_via_engine(self, batch: int, top_k: Optional[int],
                           return_scores: bool, *,
                           index: Optional[str] = None,
-                          nprobe: Optional[int] = None, queries=None):
+                          nprobe: Optional[int] = None, queries=None,
+                          telemetry=None):
         """Batched serving through the ``repro.serving`` engine: one
         engine per (top_k, batch, index, nprobe) shape, all queries
         submitted then drained as a single full micro-batch. No cache on
@@ -295,6 +305,8 @@ class PaperExperiment(Experiment):
                                       max_wait_ms=0.0, cache=None,
                                       index=index, nprobe=nprobe)
             self._engines[key] = eng
+        if telemetry is not None:
+            eng.telemetry = telemetry
         if queries is None:
             inputs = self.data_fn(10**6, batch)
             qkey = next(k for k in inputs if k != "labels")
@@ -333,7 +345,7 @@ class ZooExperiment(Experiment):
                  batch: int = 64, seq: int = 64, n_model: Optional[int] = None,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  ckpt_keep: int = 0, log_every: int = 10,
-                 seed: int = 0):
+                 seed: int = 0, telemetry=None):
         import jax
         from jax.sharding import NamedSharding
 
@@ -370,6 +382,7 @@ class ZooExperiment(Experiment):
         self.history: list = []
         self._t = 0          # data cursor: next global step fit() will take
         self.restores = 0    # bumped on every restore (serving-cache probe)
+        self.telemetry = telemetry  # Tracer, or None = NULL_TRACER
 
         from repro.train import gspmd
         self._gspmd = gspmd
@@ -527,6 +540,16 @@ class ZooExperiment(Experiment):
             if missing_ok:
                 return None
             raise FileNotFoundError(f"no checkpoints under {self.ckpt_dir}")
+        from repro.telemetry import NULL_TRACER
+        tr = self.telemetry or NULL_TRACER
+        with tr.span("train.restore"):
+            return self._do_restore(step, NamedSharding, P, tr)
+
+    def _do_restore(self, step, NamedSharding, P, tr) -> int:
+        import jax
+
+        from repro import checkpoint as ckpt
+        from repro.api.heads import HeadState
         tree, step = ckpt.restore(self.ckpt_dir, self._snapshot(), step)
         with jax.set_mesh(self.mesh):
             shards = self._gspmd.param_shardings(self.model_cfg, self.par,
@@ -550,18 +573,26 @@ class ZooExperiment(Experiment):
                 lambda a, s: jax.device_put(a, s), tree["opt"], opt_sh)
         self._t = int(tree["extra"]["t"])
         self.restores += 1
+        tr.count("train.restores")
         # aux came from the snapshot; do NOT rebuild it before the next step
         self._refreshed = True
         return step
 
     def fit(self, steps: int, *, lr: float = 0.5, resume: bool = False,
-            step_hook=None):
+            step_hook=None, telemetry=None):
         """Train ``steps`` steps from the current cursor. ``resume=True``
         restores the latest checkpoint first (if any) and treats ``steps``
         as the TOTAL target, like ``PaperExperiment.fit``. ``step_hook(t)``
-        is the fault-injection seam (``repro.resilience``)."""
+        is the fault-injection seam (``repro.resilience``); ``telemetry=``
+        installs a ``repro.telemetry.Tracer`` for per-phase spans and the
+        JSONL metrics stream (docs/telemetry.md)."""
         import jax
 
+        from repro.telemetry import NULL_TRACER
+
+        if telemetry is not None:
+            self.telemetry = telemetry
+        tr = self.telemetry or NULL_TRACER
         if resume:
             self.restore(missing_ok=True)
             steps = steps - self._t
@@ -579,21 +610,34 @@ class ZooExperiment(Experiment):
             for t in range(start, start + steps):
                 if step_hook is not None:
                     step_hook(t)
-                self.params, self.head_state, self.opt_state, loss, metrics \
-                    = self._train_step(self.params, self.head_state,
-                                       self.opt_state, self._batch(t), lr)
+                with tr.span("train.data"):
+                    inputs = self._batch(t)
+                with tr.span("train.step"):
+                    self.params, self.head_state, self.opt_state, loss, \
+                        metrics = self._train_step(
+                            self.params, self.head_state, self.opt_state,
+                            inputs, lr)
+                    if tr.enabled:
+                        jax.block_until_ready(loss)
+                tr.count("train.steps")
                 self._t = t + 1
                 if refresh_every and (t + 1) % refresh_every == 0:
-                    self.refresh_head()
+                    with tr.span("train.refresh"):
+                        self.refresh_head()
+                    tr.count("train.refreshes")
                 if self.ckpt_dir and self.ckpt_every and \
                         (t + 1) % self.ckpt_every == 0:
-                    self.save_checkpoint()
+                    with tr.span("train.checkpoint"):
+                        self.save_checkpoint()
+                    tr.count("train.checkpoints")
                 row = {"step": t, "loss": float(loss),
                        "acc": float(metrics["accuracy"])}
                 self.history.append(row)
+                tr.log_metrics(row)
                 if self.log_every and t % self.log_every == 0:
                     print(f"[zoo] step={t} loss={row['loss']:.4f} "
                           f"acc={row['acc']:.3f}")
+        tr.record_peak_memory()
         if self.ckpt_dir:
             # end-of-fit snapshot: full state (bucket weights included —
             # sketch heads' output layer must not be lost), resumable
@@ -621,7 +665,8 @@ class ZooExperiment(Experiment):
     def serve(self, *, prompt_len: int = 32, gen: int = 16,
               batch: Optional[int] = None, top_k: Optional[int] = None,
               queries=None, return_scores: bool = False,
-              index: Optional[str] = None, nprobe: Optional[int] = None):
+              index: Optional[str] = None, nprobe: Optional[int] = None,
+              telemetry=None):
         """Batched greedy decoding: prefill once, then single-token decode
         steps through the KV/SSM cache and the sharded-vocab argmax.
         Returns generated tokens [batch, gen].
@@ -637,7 +682,9 @@ class ZooExperiment(Experiment):
         from repro.data.synthetic import lm_batch
         from repro.models import decoder as dec_lib
         from repro.models import lm
+        from repro.telemetry import NULL_TRACER
 
+        tr = telemetry or NULL_TRACER
         _validate_serve_args(effective_vocab(self.model_cfg), batch, top_k)
         if index not in (None, "none", "ivf"):
             raise ValueError(f"unknown serving index {index!r}; "
@@ -663,6 +710,8 @@ class ZooExperiment(Experiment):
                                           max_wait_ms=0.0, cache=None,
                                           index=index, nprobe=nprobe)
                 engines[key] = eng
+            if telemetry is not None:
+                eng.telemetry = telemetry
             for i in range(b):
                 eng.submit(queries[i])
             done = sorted(eng.drain(), key=lambda r: r.rid)
@@ -701,7 +750,11 @@ class ZooExperiment(Experiment):
                                                       self.mesh, dshape))
             serve = jax.jit(gspmd.make_serve_step(cfg, self.par, self.mesh,
                                                   dshape))
-            tok, caches = prefill(self.params, {"tokens": prompts["tokens"]})
+            with tr.span("serve.prefill"):
+                tok, caches = prefill(self.params,
+                                      {"tokens": prompts["tokens"]})
+                if tr.enabled:
+                    jax.block_until_ready(tok)
 
             def grow(c):
                 if c.ndim >= 3 and c.shape[2] == prompt_len:
@@ -715,7 +768,11 @@ class ZooExperiment(Experiment):
                 cfg, window, prefill_positions=jnp.arange(prompt_len))
             out = [tok]
             tok = tok[:, None]
-            for _ in range(gen - 1):
-                tok, caches, slots = serve(self.params, caches, slots, tok)
-                out.append(tok[:, 0])
-            return jax.device_get(jnp.stack(out, axis=1))
+            with tr.span("serve.decode"):
+                for _ in range(gen - 1):
+                    tok, caches, slots = serve(self.params, caches, slots,
+                                               tok)
+                    out.append(tok[:, 0])
+                toks = jax.device_get(jnp.stack(out, axis=1))
+            tr.count("serve.decoded_tokens", float(toks.shape[0] * gen))
+            return toks

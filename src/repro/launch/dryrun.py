@@ -1,9 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-# ^^ MUST run before any jax import: the production meshes below need 512
-# placeholder host devices (2 pods x 16 x 16). See MULTI-POD DRY-RUN spec.
-
 """Multi-pod dry-run: lower + compile EVERY (architecture x input-shape) on
 the production meshes and record memory/cost/collective statistics.
 
@@ -20,9 +14,25 @@ The roofline report (repro.roofline.analysis + EXPERIMENTS.md) reads this
 file. Failures are recorded with the exception text — a failure here is a
 sharding bug by definition.
 
+``lower_paper_one`` is the PAPER-system counterpart (imported by
+``benchmarks/table8_end2end.py`` for the simulated-100M dry run): it
+shape-lowers the hybrid train step at an arbitrary class count on the
+CURRENT devices and cross-checks the compiled HLO's collective bytes
+against the analytic ``repro.telemetry`` comm ledger.
+
   PYTHONPATH=src python -m repro.launch.dryrun --out dryrun_results.jsonl
   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma_2b --shape train_4k --mesh both
 """
+
+import os
+
+if __name__ == "__main__":
+    # MUST run before any jax import: the production meshes below need 512
+    # placeholder host devices (2 pods x 16 x 16). Gated to the CLI so
+    # importing ``lower_paper_one`` never mutates the caller's environment.
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512")
 
 import argparse
 import dataclasses
@@ -189,6 +199,118 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
         "collectives": coll,
     }
     return result
+
+
+def lower_paper_one(*, classes: int, head: str = "full",
+                    backend: str = "ref", batch: int = 256,
+                    feat_dim: int = 64, n_micro: int = 1,
+                    n_dev: int = 0, knn_k: int = 16):
+    """Shape-lower + compile ONE paper-system hybrid train step at an
+    arbitrary class count (10**8 for the simulated-100M dry run) on the
+    current devices, WITHOUT materializing any state: every input is a
+    sharded ``ShapeDtypeStruct`` (the knn head's host-built warm-start
+    graph is replaced by a same-shape spec at the post-refresh capacity
+    ``classes * knn_k / n_dev``). Returns the same result-dict shape as
+    ``lower_one`` plus the analytic ``repro.telemetry`` comm ledger and
+    its divergence vs the compiled HLO."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.api.experiment import paper_model_config
+    from repro.api.heads import make_head
+    from repro.optim import make_optimizer
+    from repro.telemetry import train_step_ledger
+    from repro.train import hybrid
+
+    n_dev = n_dev or len(jax.devices())
+    if classes % n_dev:
+        raise ValueError(f"classes={classes} must divide over {n_dev} "
+                         f"devices")
+    if batch % n_dev or (batch // n_micro) % n_dev:
+        raise ValueError(f"batch={batch} (n_micro={n_micro}) must divide "
+                         f"over {n_dev} devices")
+    mesh = hybrid.make_hybrid_mesh(n_dev)
+    mcfg = paper_model_config("feats", classes, feat_dim)
+    hcfg = HeadConfig(softmax_impl=head, backend=backend, knn_k=knn_k,
+                      knn_kprime=2 * knn_k, active_frac=0.1)
+    tcfg = TrainConfig(optimizer="sgd")
+    h = make_head(mcfg, hcfg)
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    w = sds((classes, feat_dim), jnp.float32, P(hybrid.AXIS, None))
+    if head == "knn":
+        nnz_cap = classes * knn_k // n_dev
+        gspec = P(hybrid.AXIS, None)
+        aux = (sds((n_dev, classes + 1), jnp.int32, gspec),
+               sds((n_dev, nnz_cap), jnp.int32, gspec),
+               sds((n_dev, nnz_cap), jnp.int32, gspec))
+    elif head == "full":
+        aux = ()
+    else:
+        raise ValueError(f"lower_paper_one models heads ('full', 'knn'), "
+                         f"got {head!r}")
+    # feats trunk: the FE has no trainable params (lm.init_model's 'head'
+    # entry is what ``w`` above replaces)
+    fe: dict = {}
+    opt_tmpl = jax.eval_shape(make_optimizer(tcfg).init, (fe, w))
+    rep = lambda l: sds(l.shape, l.dtype, P())            # noqa: E731
+    wsh = lambda l: sds(l.shape, l.dtype, P(hybrid.AXIS, None))  # noqa: E731
+    opt_sds = type(opt_tmpl)(
+        step=rep(opt_tmpl.step), mu=({}, wsh(opt_tmpl.mu[1])),
+        nu=({}, wsh(opt_tmpl.nu[1])) if opt_tmpl.nu is not None else None)
+    state = hybrid.HybridState(fe, w, aux, opt_sds, None,
+                               rep(jax.ShapeDtypeStruct((), jnp.int32)))
+    inputs = {
+        "features": sds((batch, feat_dim), jnp.float32, P(hybrid.AXIS)),
+        "labels": sds((batch,), jnp.int32, P(hybrid.AXIS)),
+    }
+    lr = rep(jax.ShapeDtypeStruct((), jnp.float32))
+
+    t0 = time.perf_counter()
+    with jax.set_mesh(mesh):
+        step = hybrid.make_train_step(mcfg, hcfg, tcfg, mesh,
+                                      n_micro=n_micro, head=h,
+                                      state_template=state)
+        lowered = step.lower(state, inputs, lr)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    hlo = hlo_analyze(compiled.as_text())
+    ledger = train_step_ledger(n_dev=n_dev, rows=batch, feat_dim=feat_dim,
+                               head=head, backend=backend, n_micro=n_micro)
+    return {
+        "arch": "paper-feats", "shape": f"B{batch}xD{feat_dim}",
+        "mesh": f"{n_dev}", "mode": "train",
+        "head": head, "backend": backend, "classes": classes,
+        "n_micro": n_micro,
+        "n_params": classes * feat_dim,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+        "cost": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        },
+        "hlo": {"flops": hlo.flops, "bytes": hlo.bytes},
+        "collectives": hlo.collectives,
+        "ledger": ledger.per_kind(),
+        # exact at n_micro=1; the scan body's CSE merges one pmax above
+        # that (see repro.telemetry.ledger) — hence the looser rtol
+        "ledger_divergence": ledger.compare(
+            hlo.collectives, rtol=0.02 if n_micro == 1 else 0.10),
+    }
 
 
 def iter_combos(args):

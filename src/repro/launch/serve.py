@@ -27,10 +27,9 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 
-def _run_replay(exp, args, feat_dim: int) -> int:
+def _run_replay(exp, args, feat_dim: int, telemetry=None) -> int:
     """Trace-driven serving through the engine (both systems)."""
     import numpy as np
 
@@ -47,7 +46,7 @@ def _run_replay(exp, args, feat_dim: int) -> int:
         top_k=args.topk or None, max_batch=args.batch,
         max_wait_ms=args.max_wait_ms, cache=cache, clock=clock.now,
         index=args.index if args.index != "none" else None,
-        nprobe=args.nprobe or None)
+        nprobe=args.nprobe or None, telemetry=telemetry)
     eng.warmup(pool[0])
     done = replay_trace(eng, clock, times, qids, pool)
     lat = latency_stats(done)
@@ -107,6 +106,12 @@ def main(argv=None):
                    help="coalescer flush deadline: max time a queued query "
                         "waits for batch-mates before a partial "
                         "micro-batch is cut")
+    # telemetry (docs/telemetry.md)
+    p.add_argument("--trace-out", default="", metavar="PATH",
+                   help="write a Chrome-trace/Perfetto JSON of the serving "
+                        "spans (open at https://ui.perfetto.dev)")
+    p.add_argument("--metrics-out", default="", metavar="PATH",
+                   help="append serving metrics as JSONL")
     args = p.parse_args(argv)
 
     # validate up front: a clear argparse error beats an opaque jit shape
@@ -131,8 +136,29 @@ def main(argv=None):
 
     from repro.api.bootstrap import ensure_host_devices
     ensure_host_devices(args.devices)
+    from repro.telemetry import Tracer
+
+    # one tracer for the whole run: the timings printed below are the
+    # SAME engine/telemetry spans the benchmarks record (no second
+    # hand-rolled perf_counter clock that can disagree on cache hits)
+    tr = Tracer(metrics_path=args.metrics_out or None)
+    try:
+        return _serve(args, tr)
+    finally:
+        if args.trace_out:
+            tr.write_chrome_trace(args.trace_out)
+            print(f"[telemetry] trace -> {args.trace_out}")
+        tr.close()
+
+
+def _serve(args, tr) -> int:
     from repro.api import Experiment
     from repro.configs.base import HeadConfig
+
+    def compute_ms() -> float:
+        """Engine-measured compute wall-clock (ms) for this run's
+        serve.compute spans — what the serving benchmarks also report."""
+        return tr.span_stats("serve.compute")["total_s"] * 1e3
 
     if args.system == "paper":
         exp = Experiment.from_config(
@@ -141,26 +167,23 @@ def main(argv=None):
             head=HeadConfig(softmax_impl=args.head, backend=args.backend),
             log_every=0)
         if args.replay > 0:
-            return _run_replay(exp, args, args.feat_dim)
-        t0 = time.perf_counter()
+            return _run_replay(exp, args, args.feat_dim, telemetry=tr)
         if args.topk:
             ids, scores = exp.serve(
                 batch=args.batch, top_k=args.topk, return_scores=True,
                 index=args.index if args.index != "none" else None,
-                nprobe=args.nprobe or None)
-            dt = time.perf_counter() - t0
+                nprobe=args.nprobe or None, telemetry=tr)
             via = f" via {args.index}" if args.index != "none" else ""
             print(f"[serve] {args.head}-head top-{args.topk} retrieval over "
                   f"{args.classes} classes ({args.backend}{via}): "
-                  f"{ids.shape[0]} queries in {dt*1e3:.1f} ms")
+                  f"{ids.shape[0]} queries in {compute_ms():.1f} ms")
             print("[serve] first query ids:   ", ids[0].tolist())
             print("[serve] first query scores:",
                   [round(float(s), 3) for s in scores[0]])
             return 0
-        preds = exp.serve(batch=args.batch)
-        dt = time.perf_counter() - t0
+        preds = exp.serve(batch=args.batch, telemetry=tr)
         print(f"[serve] {args.head}-head retrieval over {args.classes} "
-              f"classes: {preds.shape[0]} queries in {dt*1e3:.1f} ms")
+              f"classes: {preds.shape[0]} queries in {compute_ms():.1f} ms")
         print("[serve] first predictions:", preds[:8].tolist())
         return 0
 
@@ -175,38 +198,37 @@ def main(argv=None):
         # on the one-shot path below
         args = argparse.Namespace(**{**vars(args),
                                      "classes": exp.model_cfg.vocab_size})
-        return _run_replay(exp, args, exp.model_cfg.d_model)
+        return _run_replay(exp, args, exp.model_cfg.d_model, telemetry=tr)
     if args.topk:
         # zoo feature retrieval against the model's class matrix (same
         # contract as the paper top-k path; token decoding stays below)
         try:
-            t0 = time.perf_counter()
             ids, scores = exp.serve(
                 batch=args.batch, top_k=args.topk, return_scores=True,
                 index=args.index if args.index != "none" else None,
-                nprobe=args.nprobe or None)
-            dt = time.perf_counter() - t0
+                nprobe=args.nprobe or None, telemetry=tr)
         except NotImplementedError as e:
             print(f"[serve] {e}")
             return 0
         via = f" via {args.index}" if args.index != "none" else ""
         print(f"[serve] zoo {args.head}-head top-{args.topk} retrieval over "
               f"{exp.model_cfg.vocab_size} classes ({args.backend}{via}): "
-              f"{ids.shape[0]} queries in {dt*1e3:.1f} ms")
+              f"{ids.shape[0]} queries in {compute_ms():.1f} ms")
         print("[serve] first query ids:   ", ids[0].tolist())
         print("[serve] first query scores:",
               [round(float(s), 3) for s in scores[0]])
         return 0
     try:
-        t0 = time.perf_counter()
         gen = exp.serve(prompt_len=args.prompt_len, gen=args.gen,
-                        batch=args.batch)
-        dt = time.perf_counter() - t0
+                        batch=args.batch, telemetry=tr)
     except NotImplementedError as e:
         print(f"[serve] {e}")
         return 0
-    print(f"[serve] generated {gen.shape} tokens in {dt*1e3:.1f} ms "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    prefill_ms = tr.span_stats("serve.prefill")["total_s"] * 1e3
+    decode_s = tr.span_stats("serve.decode")["total_s"]
+    print(f"[serve] generated {gen.shape} tokens: prefill {prefill_ms:.1f} ms"
+          f" + decode {decode_s * 1e3:.1f} ms "
+          f"({args.batch * args.gen / max(decode_s, 1e-9):.1f} tok/s)")
     print("[serve] first row:", gen[0].tolist())
     return 0
 

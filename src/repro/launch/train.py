@@ -61,6 +61,11 @@ def parse_args(argv=None):
     p.add_argument("--resume", action="store_true",
                    help="restore the latest checkpoint under --ckpt-dir and "
                         "run only the remaining steps (--steps is the TOTAL)")
+    p.add_argument("--trace-out", default="", metavar="PATH",
+                   help="write a Chrome-trace/Perfetto JSON of the run's "
+                        "telemetry spans (open at https://ui.perfetto.dev)")
+    p.add_argument("--metrics-out", default="", metavar="PATH",
+                   help="append per-step train metrics as JSONL")
     args = p.parse_args(argv)
     if args.resume and not args.ckpt_dir:
         p.error("--resume requires --ckpt-dir")
@@ -77,6 +82,24 @@ def main(argv=None):
     from repro.api import Experiment
     from repro.configs.base import (DGCConfig, FCCSConfig, HeadConfig,
                                     TrainConfig)
+    from repro.telemetry import Tracer
+
+    telemetry = None
+    if args.trace_out or args.metrics_out:
+        telemetry = Tracer(metrics_path=args.metrics_out or None)
+
+    def finish_telemetry():
+        if telemetry is None:
+            return
+        telemetry.record_peak_memory()
+        if args.trace_out:
+            telemetry.write_chrome_trace(args.trace_out)
+            st = telemetry.span_stats("train.step")
+            print(f"[telemetry] {st['count']} train.step spans "
+                  f"({st['total_s']:.2f}s) -> {args.trace_out}")
+        if args.metrics_out:
+            print(f"[telemetry] metrics -> {args.metrics_out}")
+        telemetry.close()
 
     if args.system == "paper":
         # --knn is a back-compat alias; an explicit non-default --head wins
@@ -98,9 +121,11 @@ def main(argv=None):
             feat_dim=args.feat_dim, batch=args.batch, head=hcfg, train=tcfg,
             ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
             ckpt_keep=args.ckpt_keep)
-        exp.fit(args.steps, use_fccs_batch=args.fccs, resume=args.resume)
+        exp.fit(args.steps, use_fccs_batch=args.fccs, resume=args.resume,
+                telemetry=telemetry)
         acc = exp.evaluate(eval_batch=args.batch * 4)
         print(f"[train] final eval accuracy: {acc:.4f}")
+        finish_telemetry()
         return 0
 
     impl = "knn" if (args.knn and args.head == "full") else args.head
@@ -112,9 +137,10 @@ def main(argv=None):
         train=TrainConfig(optimizer=args.optimizer),
         ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
         ckpt_keep=args.ckpt_keep)
-    exp.fit(args.steps, lr=args.lr, resume=args.resume)
+    exp.fit(args.steps, lr=args.lr, resume=args.resume, telemetry=telemetry)
     acc = exp.evaluate()
     print(f"[zoo] final next-token accuracy: {acc:.4f}")
+    finish_telemetry()
     return 0
 
 

@@ -100,6 +100,8 @@ class RecoveryReport:
     loss_max_rel: float = 0.0         # resumed-vs-reference loss rows
     resumed_history: list = field(default_factory=list)
     reference_history: list = field(default_factory=list)
+    restore_spans: list = field(default_factory=list)  # telemetry
+                                      # "train.restore" SpanEvents
 
     @property
     def ok(self) -> bool:
@@ -132,15 +134,20 @@ def kill_and_recover(make_exp: Callable[[Optional[str]], object], *,
                      total_steps: int, kill_at: int, ckpt_dir: str,
                      equivalence: str = "bitwise", head: str = "?",
                      fit_kw: Optional[dict] = None,
-                     plan: Optional[FaultPlan] = None) -> RecoveryReport:
+                     plan: Optional[FaultPlan] = None,
+                     telemetry=None) -> RecoveryReport:
     """Run the full scenario and report.
 
     ``make_exp(ckpt_dir)`` must build a FRESH experiment (new params, new
     jit caches) writing checkpoints under ``ckpt_dir`` when it is not
     None — each call simulates a separate process. ``fit_kw`` is passed to
     every ``fit`` call (e.g. ``{"lr": 0.5}`` for the zoo,
-    ``{"use_fccs_batch": True}`` for the paper system).
+    ``{"use_fccs_batch": True}`` for the paper system). ``telemetry=``
+    (a ``repro.telemetry.Tracer``; one is created internally when omitted)
+    is installed on the resumed experiment, and its recorded
+    ``train.restore`` spans land in ``RecoveryReport.restore_spans``.
     """
+    from repro.telemetry import Tracer
     if equivalence not in ("bitwise", "trajectory"):
         raise ValueError(f"unknown equivalence class {equivalence!r}")
     if not 0 < kill_at < total_steps:
@@ -163,8 +170,13 @@ def kill_and_recover(make_exp: Callable[[Optional[str]], object], *,
         pass
 
     # 3. fresh process-simulated trainer restores and replays to the end
+    tele = telemetry if telemetry is not None else Tracer()
     t0 = time.perf_counter()
     resumed = make_exp(ckpt_dir)
+    if hasattr(resumed, "trainer"):        # paper system
+        resumed.trainer.telemetry = tele
+    else:                                  # zoo system
+        resumed.telemetry = tele
     restored_step = resumed.restore()
     recovery_s = time.perf_counter() - t0
     remaining = total_steps - _cursor_of(resumed)
@@ -181,4 +193,6 @@ def kill_and_recover(make_exp: Callable[[Optional[str]], object], *,
         loss_max_rel=_loss_divergence(_history_of(resumed),
                                       _history_of(ref)),
         resumed_history=list(_history_of(resumed)),
-        reference_history=list(_history_of(ref)))
+        reference_history=list(_history_of(ref)),
+        restore_spans=[e for e in tele.events
+                       if e.name == "train.restore"])

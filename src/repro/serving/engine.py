@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.serving.cache import ScoreCache
 from repro.serving.coalescer import Coalescer, Request, bucket_for
+from repro.telemetry import NULL_TRACER
 
 
 def latency_stats(requests: Sequence[Request]) -> dict:
@@ -62,8 +63,9 @@ class ServingEngine:
                  max_wait_ms: float = 2.0, cache: Optional[ScoreCache] = None,
                  clock: Callable[[], float] = time.monotonic,
                  version_fn: Optional[Callable[[], Any]] = None,
-                 min_bucket: int = 2):
+                 min_bucket: int = 2, telemetry=None):
         self.step_fn = step_fn
+        self.telemetry = telemetry or NULL_TRACER
         self.top_k = top_k
         self.cache = cache
         self.clock = clock
@@ -102,12 +104,14 @@ class ServingEngine:
         rid = self._rid
         self._rid += 1
         self.n_submitted += 1
+        tr = self.telemetry or NULL_TRACER
+        tr.count("serve.submitted")
         req = Request(rid=rid, query=q, t_submit=now)
         if self.cache is not None:
             self._check_version()
             t0 = time.perf_counter_ns()
             hit = self.cache.get(q)
-            lookup_s = (time.perf_counter_ns() - t0) * 1e-9
+            lookup_ns = time.perf_counter_ns() - t0
             if hit is not None:
                 (ids, scores), _kind = hit
                 req.ids, req.scores = ids, scores
@@ -115,9 +119,12 @@ class ServingEngine:
                 # a cache hit is served in the measured lookup time, not
                 # zero — sub-ms latencies must survive into the percentiles
                 req.t_flush = req.t_start = now
-                req.t_done = now + lookup_s
+                req.t_done = now + lookup_ns * 1e-9
                 self._done.append(req)
+                tr.count("serve.cache_hits")
+                tr.add_span("serve.cache_hit", t0, lookup_ns)
                 return rid
+            tr.count("serve.cache_misses")
         self.coalescer.put(req)
         return rid
 
@@ -131,21 +138,32 @@ class ServingEngine:
         return q
 
     def _run_batch(self, mb) -> List[Request]:
+        tr = self.telemetry or NULL_TRACER
         n = len(mb.requests)
-        padded = self._pad([r.query for r in mb.requests], mb.bucket)
+        with tr.span("serve.flush"):
+            padded = self._pad([r.query for r in mb.requests], mb.bucket)
         t0 = time.perf_counter_ns()
         with warnings.catch_warnings():
             # buffer donation is best-effort: XLA warns when out shapes
             # cannot alias the donated input; that is expected here
             warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
             ids, scores = self.step_fn(padded, n)
-        dt = (time.perf_counter_ns() - t0) * 1e-9
+        dt_ns = time.perf_counter_ns() - t0
+        dt = dt_ns * 1e-9
         self.n_batches += 1
         self.occupancies.append(mb.occupancy)
         self.compute_s += dt
+        tr.add_span("serve.compute", t0, dt_ns)
+        tr.count("serve.batches")
+        tr.gauge("serve.occupancy", mb.occupancy)
+        if self.cache is not None:
+            tr.gauge("serve.cache_hit_rate", self.cache.hit_rate)
         t_start = max(mb.t_flush, self._server_free_at)
         t_done = t_start + dt
         self._server_free_at = t_done
+        # queue wait on the engine clock: submit -> modeled batch start
+        tr.count("serve.queue_wait_s",
+                 sum(t_start - r.t_submit for r in mb.requests))
         ids = np.asarray(ids)
         scores = None if scores is None else np.asarray(scores)
         for i, r in enumerate(mb.requests):
@@ -217,7 +235,8 @@ class ServingEngine:
                        clock: Callable[[], float] = time.monotonic,
                        donate: bool = True, min_bucket: int = 2,
                        index: Optional[str] = None,
-                       nprobe: Optional[int] = None) -> "ServingEngine":
+                       nprobe: Optional[int] = None,
+                       telemetry=None) -> "ServingEngine":
         """Build an engine over a paper (hybrid) or zoo (GSPMD)
         ``Experiment``. Queries are single feature embeddings ``[D]`` (or
         images for the cnn trunk); ``top_k=None`` serves greedy class ids,
@@ -252,7 +271,7 @@ class ServingEngine:
         return ServingEngine(step_fn, top_k=top_k, max_batch=max_batch,
                              max_wait_ms=max_wait_ms, cache=cache,
                              clock=clock, version_fn=version_fn,
-                             min_bucket=min_bucket)
+                             min_bucket=min_bucket, telemetry=telemetry)
 
 
 def replay_trace(engine: ServingEngine, clock, times, qids,

@@ -1,0 +1,158 @@
+"""Analytic comm-volume ledger: bytes per collective per train step.
+
+The paper's claim structure (§3.3, Table 4/8) makes the OUTPUT-LAYER
+collectives, not FLOPs, the scale-limiting observable at 100M classes —
+so the ledger charges them analytically from head config + mesh shape and
+cross-checks against the compiled step's HLO (``repro.roofline.hlo``).
+
+Model of one hybrid-parallel train step (``repro.train.hybrid``), P
+devices on the ring, R global rows per step (features [R, D] f32,
+labels [R] i32), ``n_micro`` micro-batches:
+
+  all-gather       features R*D*4 + labels R*4 bytes (HLO charges the
+                   gathered OUTPUT shape; the per-micro gathers tile to
+                   the same per-step total).
+  all-reduce (CE)  the distributed-softmax completion moves [b]-sized
+                   terms per micro (b = R/n_micro): the ref backend's
+                   ``_finish_ce`` psums/pmaxes 5 of them forward (m, z,
+                   corr, vmax, pred_here), the pallas stats path 4 (vmax
+                   is reused) — PLUS 2 backward terms either way: under
+                   shard_map autodiff the transpose of ``psum`` is again
+                   a ``psum`` (per-device cotangents of a replicated
+                   value sum over the ring), so the differentiated z and
+                   corr completions each charge one more [b]-sized
+                   all-reduce. Total 7 ref / 6 pallas. The knn head adds
+                   the label-recall psum [b] plus a scalar
+                   active-fraction pmean per micro. ``batch_axes=()``
+                   psums compile to nothing — they are NOT charged.
+                   (At n_micro > 1 XLA CSE may merge the duplicate pmax
+                   inside the scan body, shaving one [b] term — the
+                   model is exact at n_micro=1 and ~7% high under the
+                   scan; compare with a matching rtol.)
+  reduce-scatter   backward of the feature all-gather: R*D*4/P bytes —
+                   only when the FE trunk has trainable params (the
+                   feats trunk's empty FE makes the whole backward
+                   collective dead code, so it charges 0).
+  all-reduce (fe)  dense gradient exchange: 4 bytes per FE param. DGC's
+                   masked-dense psum moves the SAME dense bytes on the
+                   wire — its sparse wire accounting (nnz * 8) is the
+                   trainer's ``comm_wire_bytes`` metric, not an HLO
+                   quantity.
+
+``CommLedger.compare`` diffs the ledger against an HLO measurement BY
+KIND AND BYTES, not op counts — XLA's all-reduce combiner merges same-kind
+ops into tuple all-reduces (bytes preserved, counts not).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# heads whose per-step collective structure the ledger models exactly
+LEDGER_HEADS = ("full", "knn")
+
+
+@dataclass
+class Collective:
+    """One charged collective: ``bytes`` is the per-step total (HLO
+    convention: output-shape bytes), ``count`` the number of launches."""
+    kind: str
+    label: str
+    bytes: float
+    count: int = 1
+
+
+class CommLedger:
+    """An itemized per-step comm bill; shape-compatible with
+    ``repro.roofline.hlo`` ``Analysis.collectives`` via ``per_kind``."""
+
+    def __init__(self, entries: Optional[list] = None):
+        self.entries: list[Collective] = list(entries or [])
+
+    def add(self, kind: str, label: str, nbytes: float,
+            count: int = 1) -> "CommLedger":
+        if kind not in COLLECTIVE_KINDS:
+            raise ValueError(f"unknown collective kind {kind!r}; "
+                             f"expected one of {COLLECTIVE_KINDS}")
+        self.entries.append(Collective(kind, label, float(nbytes), count))
+        return self
+
+    def per_kind(self) -> dict:
+        """{kind: {"bytes", "count"}} + "total_bytes" — the same shape
+        ``roofline.hlo.analyze`` reports, so the two diff directly."""
+        out: dict = {}
+        for e in self.entries:
+            slot = out.setdefault(e.kind, {"bytes": 0.0, "count": 0})
+            slot["bytes"] += e.bytes
+            slot["count"] += e.count
+        out["total_bytes"] = sum(e.bytes for e in self.entries)
+        return out
+
+    def total_bytes(self) -> float:
+        return sum(e.bytes for e in self.entries)
+
+    def compare(self, measured: dict, *, rtol: float = 0.05) -> list:
+        """Diff this ledger against an HLO-measured collectives dict
+        (``Analysis.collectives``). Returns human-readable divergence
+        strings for every kind whose BYTES disagree by more than
+        ``rtol`` relative — empty means the analytic model matches the
+        compiled step."""
+        mine = self.per_kind()
+        problems = []
+        kinds = (set(mine) | set(measured)) - {"total_bytes"}
+        for kind in sorted(kinds):
+            a = float(mine.get(kind, {}).get("bytes", 0.0))
+            b = float(measured.get(kind, {}).get("bytes", 0.0))
+            if a == 0.0 and b == 0.0:
+                continue
+            rel = abs(a - b) / max(a, b)
+            if rel > rtol:
+                problems.append(
+                    f"{kind}: ledger {a:.0f} B vs measured {b:.0f} B "
+                    f"({rel:.1%} > rtol {rtol:.1%})")
+        return problems
+
+
+def train_step_ledger(*, n_dev: int, rows: int, feat_dim: int,
+                      head: str = "full", backend: str = "ref",
+                      n_micro: int = 1, fe_param_count: int = 0,
+                      dtype_bytes: int = 4,
+                      label_bytes: int = 4) -> CommLedger:
+    """The analytic per-step ledger for one hybrid-parallel train step.
+
+    ``rows`` is the GLOBAL rows per step (batch for the feats trunk,
+    batch*seq for LM trunks), ``fe_param_count`` the trainable FE param
+    count (0 for the feats trunk — no backward/exchange collectives).
+    Cross-checked against compiled HLO in ``tests/test_telemetry.py`` and
+    gated in ``benchmarks/table4_comm.py``.
+    """
+    if head not in LEDGER_HEADS:
+        raise ValueError(
+            f"ledger models heads {LEDGER_HEADS}, got {head!r} — extend "
+            f"the model before charging it")
+    if rows % n_micro:
+        raise ValueError(f"rows={rows} not divisible by n_micro={n_micro}")
+    led = CommLedger()
+    led.add("all-gather", "features[R,D]", rows * feat_dim * dtype_bytes,
+            count=n_micro)
+    led.add("all-gather", "labels[R]", rows * label_bytes, count=n_micro)
+    # distributed-softmax completion: [b]-sized terms per micro sum to
+    # [R]-sized terms per step; forward 5 (ref) / 4 (pallas) plus the 2
+    # backward transpose-of-psum terms (z, corr) — see module docstring
+    ce_terms = 7 if backend == "ref" else 6
+    led.add("all-reduce", f"softmax_ce({backend})",
+            ce_terms * rows * dtype_bytes, count=ce_terms * n_micro)
+    if head == "knn":
+        led.add("all-reduce", "knn_label_recall", rows * dtype_bytes,
+                count=n_micro)
+        led.add("all-reduce", "knn_active_frac", dtype_bytes * n_micro,
+                count=n_micro)
+    if fe_param_count > 0:
+        led.add("reduce-scatter", "d_features",
+                rows * feat_dim * dtype_bytes // n_dev, count=n_micro)
+        led.add("all-reduce", "fe_grad_exchange",
+                fe_param_count * dtype_bytes)
+    return led

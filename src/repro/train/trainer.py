@@ -33,6 +33,7 @@ from repro.api.heads import HeadState, make_head
 from repro.configs.base import HeadConfig, ModelConfig, TrainConfig
 from repro.core import fccs
 from repro.core import sparsify as sp
+from repro.telemetry import NULL_TRACER
 from repro.train import hybrid
 
 
@@ -60,6 +61,7 @@ class PaperTrainer:
     log_every: int = 10
     seed: int = 0
     history: list = field(default_factory=list)
+    telemetry: object = None                # Tracer, or None = NULL_TRACER
 
     def __post_init__(self):
         if self.use_knn and self.head_cfg.softmax_impl == "full":
@@ -93,9 +95,12 @@ class PaperTrainer:
     def refresh_head(self):
         """Paper §3.2.2: suspend training, rebuild the head's aux state on
         the training devices, resume. Returns the wall-clock spent."""
+        tr = self.telemetry or NULL_TRACER
         t0 = time.perf_counter()
-        self.state = hybrid.refresh_head_state(self.head, self.mesh,
-                                               self.state)
+        with tr.span("train.refresh"):
+            self.state = hybrid.refresh_head_state(self.head, self.mesh,
+                                                   self.state)
+        tr.count("train.refreshes")
         return time.perf_counter() - t0
 
     # back-compat name (pre-registry API)
@@ -135,6 +140,11 @@ class PaperTrainer:
         assert self.ckpt_dir, "trainer has no ckpt_dir"
         from jax.sharding import NamedSharding
 
+        tr = self.telemetry or NULL_TRACER
+        with tr.span("train.restore"):
+            return self._restore_checkpoint(step, NamedSharding, tr)
+
+    def _restore_checkpoint(self, step, NamedSharding, tr) -> int:
         tree, step = ckpt_lib.restore(self.ckpt_dir, self._snapshot(), step)
         specs = hybrid.state_specs(self.state, self.head)
         mesh = self.mesh
@@ -157,6 +167,7 @@ class PaperTrainer:
             jnp.asarray(tree["extra"]["step"], jnp.int32))
         self._t = int(tree["extra"]["t"])
         self.restores += 1
+        tr.count("train.restores")
         return step
 
     # -- the loop ----------------------------------------------------------
@@ -171,6 +182,7 @@ class PaperTrainer:
         fcfg = self.train_cfg.fccs
         refresh_every = self.head.refresh_every
         start = self._t
+        tr = self.telemetry or NULL_TRACER
         with jax.set_mesh(self.mesh):
             for t in range(start, start + total_steps):
                 if step_hook is not None:
@@ -179,22 +191,33 @@ class PaperTrainer:
                       else fccs.learning_rate(t, fcfg))
                 n = (_pow2_quantize(fccs.accum_steps(t, fcfg, self.hw_batch))
                      if use_fccs_batch else 1)
-                inputs = self.data_fn(t, self.hw_batch * n)
-                step = self._get_step(n)
-                self.state, loss, metrics = step(self.state, inputs, lr)
+                with tr.span("train.data"):
+                    inputs = self.data_fn(t, self.hw_batch * n)
+                    step = self._get_step(n)
+                with tr.span("train.step"):
+                    self.state, loss, metrics = step(self.state, inputs, lr)
+                    if tr.enabled:
+                        # async dispatch would end the span at launch time;
+                        # only a live tracer pays for the sync
+                        jax.block_until_ready(loss)
+                tr.count("train.steps")
                 self._t = t + 1
                 if refresh_every and (t + 1) % refresh_every == 0:
                     self.refresh_head()
                 if self.ckpt_dir and self.ckpt_every and \
                         (t + 1) % self.ckpt_every == 0:
-                    self.save_checkpoint()
+                    with tr.span("train.checkpoint"):
+                        self.save_checkpoint()
+                    tr.count("train.checkpoints")
                 row = {"step": t, "lr": lr, "batch": self.hw_batch * n,
                        "loss": float(loss),
                        "acc": float(metrics["accuracy"])}
                 self.history.append(row)
+                tr.log_metrics(row)
                 if self.log_every and t % self.log_every == 0:
                     print(f"[train] step={t} lr={lr:.4f} B={row['batch']} "
                           f"loss={row['loss']:.4f} acc={row['acc']:.3f}")
+        tr.record_peak_memory()
         return self.history
 
     def evaluate(self, eval_inputs) -> float:

@@ -1,0 +1,209 @@
+"""repro.telemetry: span nesting under a fake clock, the disabled
+tracer's zero-allocation guarantee, Chrome-trace round-trip, the analytic
+comm ledger vs the compiled step's HLO, and JSONL sink append semantics
+(ISSUE 9 / docs/telemetry.md)."""
+import json
+
+import pytest
+
+from repro.telemetry import (NULL_TRACER, CommLedger, MetricsSink, Tracer,
+                             train_step_ledger)
+from repro.telemetry.tracer import _NullSpan
+
+
+class FakeClock:
+    """Deterministic ns clock: every read advances by ``tick_ns``."""
+
+    def __init__(self, tick_ns: int = 1000):
+        self.t = 0
+        self.tick_ns = tick_ns
+
+    def __call__(self) -> int:
+        self.t += self.tick_ns
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_determinism_under_fake_clock():
+    tr = Tracer(clock_ns=FakeClock(1000))
+    with tr.span("outer"):
+        with tr.span("inner", attrs={"k": 1}):
+            pass
+        with tr.span("inner"):
+            pass
+    # spans close inner-first; depth recorded at entry
+    assert [(e.name, e.depth) for e in tr.events] == [
+        ("inner", 1), ("inner", 1), ("outer", 0)]
+    # fake clock: enter/exit each consume one 1000ns tick, so every
+    # leaf span lasts exactly one tick and the outer one spans all reads
+    inner1, inner2, outer = tr.events
+    assert inner1.dur_ns == 1000 and inner2.dur_ns == 1000
+    assert outer.start_ns == 1000 and outer.dur_ns == 5000
+    # a second identical run produces identical events (determinism)
+    tr2 = Tracer(clock_ns=FakeClock(1000))
+    with tr2.span("outer"):
+        with tr2.span("inner", attrs={"k": 1}):
+            pass
+        with tr2.span("inner"):
+            pass
+    assert tr2.events == tr.events
+
+
+def test_span_stats_and_counters():
+    tr = Tracer(clock_ns=FakeClock(500))
+    for _ in range(3):
+        with tr.span("step"):
+            pass
+    tr.add_span("step", start_ns=10_000, dur_ns=2_000)
+    st = tr.span_stats("step")
+    assert st["count"] == 4
+    assert st["total_s"] == pytest.approx((3 * 500 + 2000) * 1e-9)
+    assert tr.span_stats("absent") == {"count": 0, "total_s": 0.0}
+    assert tr.count("steps") == 1.0
+    assert tr.count("steps", 2.0) == 3.0
+    tr.gauge("occupancy", 0.5)
+    assert tr.counters["steps"] == 3.0 and tr.gauges["occupancy"] == 0.5
+
+
+def test_null_tracer_is_zero_alloc_no_op():
+    before = _NullSpan.instances
+    for _ in range(10_000):
+        with NULL_TRACER.span("hot", attrs=None):
+            pass
+        NULL_TRACER.count("hot.steps")
+        NULL_TRACER.gauge("hot.g", 1)
+        NULL_TRACER.log_metrics({"x": 1})
+    # the module-level singleton is the ONLY instance ever made: the hot
+    # loop above allocated zero spans
+    assert _NullSpan.instances == before == 1
+    assert NULL_TRACER.enabled is False
+    assert NULL_TRACER.events == ()
+    assert NULL_TRACER.span_stats("hot") == {"count": 0, "total_s": 0.0}
+    assert NULL_TRACER.count("hot.steps") == 0.0
+    NULL_TRACER.close()  # harmless
+
+
+# ---------------------------------------------------------------------------
+# chrome-trace export
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_round_trip(tmp_path):
+    tr = Tracer(clock_ns=FakeClock(1000))
+    with tr.span("train.step", attrs={"step": 0}):
+        with tr.span("train.data"):
+            pass
+    tr.count("train.steps")
+    tr.gauge("mem.peak_bytes.host_rss", 123)
+    path = tr.write_chrome_trace(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        loaded = json.load(f)
+    assert loaded == tr.chrome_trace()
+    events = loaded["traceEvents"]
+    assert [e["name"] for e in events] == ["train.data", "train.step"]
+    for e in events:
+        assert e["ph"] == "X" and e["pid"] == 0 and e["tid"] == 0
+    # µs timestamps from the ns clock; attrs + depth ride in args
+    assert events[1]["ts"] == 1.0 and events[1]["dur"] == 3.0
+    assert events[1]["args"] == {"depth": 0, "step": 0}
+    assert events[0]["args"]["depth"] == 1
+    assert loaded["counters"] == {"train.steps": 1.0}
+    assert loaded["gauges"] == {"mem.peak_bytes.host_rss": 123}
+    assert loaded["displayTimeUnit"] == "ms"
+
+
+# ---------------------------------------------------------------------------
+# metrics sink (JSONL)
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_sink_appends_across_reopens(tmp_path):
+    path = str(tmp_path / "metrics.jsonl")
+    with MetricsSink(path) as sink:
+        sink.write({"step": 0, "loss": 2.0})
+        sink.write({"step": 1, "loss": 1.5})
+        assert sink.n_rows == 2
+    # a fresh sink on the same path APPENDS (resume semantics), never
+    # truncates
+    tr = Tracer(metrics_path=path)
+    tr.log_metrics({"step": 2, "loss": 1.0})
+    tr.close()
+    with open(path) as f:
+        rows = [json.loads(line) for line in f]
+    assert [r["step"] for r in rows] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# comm-volume ledger
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_bookkeeping():
+    led = CommLedger()
+    led.add("all-gather", "x", 100).add("all-reduce", "y", 50, count=2)
+    pk = led.per_kind()
+    assert pk["all-gather"] == {"bytes": 100.0, "count": 1}
+    assert pk["all-reduce"] == {"bytes": 50.0, "count": 2}
+    assert pk["total_bytes"] == led.total_bytes() == 150.0
+    with pytest.raises(ValueError, match="unknown collective kind"):
+        led.add("broadcast", "z", 1)
+    with pytest.raises(ValueError, match="extend"):
+        train_step_ledger(n_dev=4, rows=8, feat_dim=4, head="mach")
+    # compare flags per-kind byte divergence and nothing else
+    assert led.compare({"all-gather": {"bytes": 100.0},
+                        "all-reduce": {"bytes": 50.0}}) == []
+    bad = led.compare({"all-gather": {"bytes": 100.0},
+                       "all-reduce": {"bytes": 75.0}})
+    assert len(bad) == 1 and bad[0].startswith("all-reduce")
+    # a kind only the measurement saw still diverges
+    assert led.compare({"all-gather": {"bytes": 100.0},
+                        "all-reduce": {"bytes": 50.0},
+                        "all-to-all": {"bytes": 7.0}}) != []
+
+
+@pytest.mark.parametrize("head,backend", [
+    ("full", "ref"), ("full", "pallas"),
+    ("knn", "ref"), ("knn", "pallas"),
+])
+def test_ledger_matches_compiled_hlo_mesh4(head, backend):
+    """The analytic ledger must match the compiled hybrid train step's
+    HLO collective bytes on a 4-device mesh (exact at n_micro=1)."""
+    from repro.launch.dryrun import lower_paper_one
+
+    r = lower_paper_one(classes=256, head=head, backend=backend,
+                        batch=32, feat_dim=16, n_micro=1, n_dev=4)
+    assert r["ledger_divergence"] == [], r["ledger_divergence"]
+    assert r["ledger"]["total_bytes"] > 0
+    # and the ledger total equals the HLO total within the same rtol
+    meas = r["collectives"]["total_bytes"]
+    assert meas == pytest.approx(r["ledger"]["total_bytes"], rel=0.02)
+
+
+def test_ledger_matches_compiled_hlo_micro_pipeline():
+    """n_micro > 1 runs the CE completion inside a scan; XLA CSE may
+    merge a duplicate pmax, so the model is ~7% high — rtol 10%."""
+    from repro.launch.dryrun import lower_paper_one
+
+    r = lower_paper_one(classes=256, head="full", backend="ref",
+                        batch=32, feat_dim=16, n_micro=2, n_dev=4)
+    assert r["ledger_divergence"] == [], r["ledger_divergence"]
+
+
+def test_ledger_fe_param_terms():
+    """LM-style trunks add the backward reduce-scatter and the dense
+    gradient exchange; the feats trunk (fe_param_count=0) charges
+    neither."""
+    feats = train_step_ledger(n_dev=4, rows=32, feat_dim=16)
+    assert "reduce-scatter" not in feats.per_kind()
+    lm = train_step_ledger(n_dev=4, rows=32, feat_dim=16,
+                           fe_param_count=1000)
+    pk = lm.per_kind()
+    assert pk["reduce-scatter"]["bytes"] == 32 * 16 * 4 / 4
+    labels = {e.label: e.bytes for e in lm.entries}
+    assert labels["fe_grad_exchange"] == 4000.0
+    with pytest.raises(ValueError, match="divisible"):
+        train_step_ledger(n_dev=4, rows=33, feat_dim=16, n_micro=2)
