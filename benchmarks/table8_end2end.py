@@ -139,6 +139,21 @@ def run(quick: bool = False):
             f"comm_bytes_per_step={rep['comm_bytes_per_step']:.0f} "
             f"compile_s={rep['compile_s']:.1f}")
 
+    # elastic reshard traffic (repro.elastic): analytic dense-head bytes a
+    # checkpoint written on the 8-way ring moves when restored onto a
+    # shrunk (4) and a grown (16) mesh — the benchmark-side twin of the
+    # restore path's measured "reshard.bytes_moved" counter
+    from repro.elastic import MeshGeometry, analytic_reshard_ledger
+    src_geo = MeshGeometry(n_model=8, n_data=8, n_classes=N)
+    reshard = {}
+    for n_dst in (4, 16):
+        led = analytic_reshard_ledger(
+            src_geo, MeshGeometry(n_model=n_dst, n_data=n_dst, n_classes=N),
+            row_bytes=D * 4, n_moment_trees=1)
+        reshard[f"bytes_moved_8to{n_dst}"] = led.total_bytes()
+        row(f"table8/reshard_8to{n_dst}", 0.0,
+            f"bytes_moved={led.total_bytes():.0f}")
+
     # FCCS epoch reduction (paper: 20 -> 8 epochs == 2.5x fewer iterations)
     hcfg = HeadConfig(softmax_impl="knn", knn_k=16, knn_kprime=32,
                       active_frac=0.1)
@@ -165,6 +180,7 @@ def run(quick: bool = False):
         "throughput_sps": throughput,
         "heads": heads,
         "sim100m": sim,
+        "reshard": reshard,
         "fccs": {"accuracy": acc, "steps": steps,
                  "equiv_const_batch_steps": equiv_steps,
                  "iteration_reduction": equiv_steps / steps},

@@ -66,6 +66,78 @@ for head in ("full", "knn"):
 EOF
 rm -rf "$CKPT_TMP"
 
+# elastic leg (repro.elastic, docs/resilience.md): a checkpoint written on
+# the 8-way ring restores onto a SHRUNK (4) and a GROWN (16) mesh —
+# reshard=True re-partitions the rows — with bitwise dense-head serve
+# parity and decode-equivalent mach retrieval; each mesh size needs its
+# own process (device count is fixed before jax initializes)
+echo "=== elastic / 8-way ckpt -> 4- and 16-way reshard + serve parity ==="
+ELASTIC_TMP=$(mktemp -d)
+python - "$ELASTIC_TMP" <<'EOF'
+import sys
+import numpy as np
+from repro.api.bootstrap import ensure_host_devices
+ensure_host_devices(8)
+from repro.api import Experiment
+from repro.configs.base import HeadConfig
+
+for head in ("full", "mach"):
+    exp = Experiment.from_config(
+        system="paper", classes=256, feat_dim=32, batch=16,
+        head=HeadConfig(softmax_impl=head, knn_k=8, knn_kprime=16,
+                        rebuild_every=5, mach_b=64, mach_r=2),
+        ckpt_dir=f"{sys.argv[1]}/{head}", ckpt_every=4, log_every=0)
+    exp.fit(4, use_fccs_batch=False)
+    x = exp.data_fn(10**6, 16)
+    if head == "full":
+        ids, sc = exp.serve(x, top_k=5, return_scores=True)
+    else:  # sketch heads decode greedily (no [V, D] matrix to top-k)
+        ids, sc = exp.serve(x), np.zeros(())
+    np.savez(f"{sys.argv[1]}/{head}_ref.npz", ids=np.asarray(ids),
+             sc=np.asarray(sc))
+print("elastic: 8-way source checkpoints + serve references written")
+EOF
+for n in 4 16; do
+  python - "$ELASTIC_TMP" "$n" <<'EOF'
+import sys
+import numpy as np
+from repro.api.bootstrap import ensure_host_devices
+n = int(sys.argv[2])
+ensure_host_devices(n)
+from repro.api import Experiment
+from repro.configs.base import HeadConfig
+
+for head in ("full", "mach"):
+    exp = Experiment.from_config(
+        system="paper", classes=256, feat_dim=32, batch=16,
+        head=HeadConfig(softmax_impl=head, knn_k=8, knn_kprime=16,
+                        rebuild_every=5, mach_b=64, mach_r=2),
+        ckpt_dir=f"{sys.argv[1]}/{head}", ckpt_every=4, log_every=0)
+    assert exp.restore(reshard=True) == 4
+    x = exp.data_fn(10**6, 16)
+    ref = np.load(f"{sys.argv[1]}/{head}_ref.npz")
+    if head == "full":  # dense ids AND scores are bitwise across meshes
+        ids, sc = exp.serve(x, top_k=5, return_scores=True)
+        np.testing.assert_array_equal(np.asarray(sc), ref["sc"])
+    else:  # sketch decode equivalence (buckets kept verbatim: 4|64, 16|64)
+        ids = exp.serve(x)
+    np.testing.assert_array_equal(np.asarray(ids), ref["ids"])
+    print(f"elastic 8->{n} / {head}: restored step 4, serve parity OK "
+          f"(bytes_moved={exp.trainer.last_reshard['bytes_moved']:.0f})")
+EOF
+done
+
+# launcher path: --resume-reshard continues an 8-ring run on a 4-ring to
+# the full step budget
+echo "=== elastic / launcher --resume-reshard continuation (8 -> 4) ==="
+python -m repro.launch.train --system paper --devices 8 --head full \
+    --classes 256 --feat-dim 32 --steps 4 --batch 16 --lr 2.0 \
+    --ckpt-dir "$ELASTIC_TMP/launch" --ckpt-every 4
+python -m repro.launch.train --system paper --devices 4 --head full \
+    --classes 256 --feat-dim 32 --steps 8 --batch 16 --lr 2.0 \
+    --ckpt-dir "$ELASTIC_TMP/launch" --ckpt-every 4 --resume-reshard
+rm -rf "$ELASTIC_TMP"
+
 # serving tier: tiny load replays (full-softmax retrieval + a sketch head)
 # through the coalescing/caching engine; BENCH_serve.json goes to a temp
 # dir so smoke never dirties the committed perf trajectory

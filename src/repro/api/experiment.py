@@ -179,12 +179,15 @@ class PaperExperiment(Experiment):
         return (self.trainer.restores, int(self.trainer.state.step))
 
     def fit(self, steps: int, *, use_fccs_batch: bool = True,
-            resume: bool = False, step_hook=None, telemetry=None):
+            resume=False, step_hook=None, telemetry=None):
         """Train. ``steps`` is the number of steps to run from the current
         cursor; with ``resume=True`` the latest checkpoint under
         ``ckpt_dir`` is restored first (if any) and ``steps`` becomes the
         TOTAL step target — a killed 100-step run relaunched with
         ``fit(100, resume=True)`` replays only the lost tail.
+        ``resume="reshard"`` additionally accepts a checkpoint written on
+        a DIFFERENT mesh shape and re-shards it onto this experiment's
+        ring (repro.elastic; launcher: ``--resume-reshard``).
         ``step_hook(t)`` fires before each step (fault injection —
         ``repro.resilience``); ``telemetry=`` installs a
         ``repro.telemetry.Tracer`` on the trainer for per-phase spans and
@@ -192,7 +195,7 @@ class PaperExperiment(Experiment):
         if telemetry is not None:
             self.trainer.telemetry = telemetry
         if resume:
-            self.restore(missing_ok=True)
+            self.restore(missing_ok=True, reshard=(resume == "reshard"))
             steps = steps - self.trainer._t
         if steps > 0:
             self.trainer.run(steps, use_fccs_batch=use_fccs_batch,
@@ -200,10 +203,13 @@ class PaperExperiment(Experiment):
         return self.trainer.history
 
     def restore(self, step: Optional[int] = None, *,
-                missing_ok: bool = False) -> Optional[int]:
+                missing_ok: bool = False,
+                reshard: bool = False) -> Optional[int]:
         """Restore the FULL trainer state (params, opt moments, head aux,
-        DGC buffers, data cursor) from ``ckpt_dir``. Returns the restored
-        step, or None when ``missing_ok`` and no checkpoint exists."""
+        DGC buffers, data cursor) from ``ckpt_dir``. ``reshard=True``
+        accepts a checkpoint written on a different mesh shape
+        (repro.elastic). Returns the restored step, or None when
+        ``missing_ok`` and no checkpoint exists."""
         from repro import checkpoint as ckpt
         if not self.trainer.ckpt_dir:
             raise ValueError("experiment has no ckpt_dir to restore from")
@@ -212,7 +218,7 @@ class PaperExperiment(Experiment):
                 return None
             raise FileNotFoundError(
                 f"no checkpoints under {self.trainer.ckpt_dir}")
-        return self.trainer.restore_checkpoint(step)
+        return self.trainer.restore_checkpoint(step, reshard=reshard)
 
     def evaluate(self, inputs=None, *, eval_batch: Optional[int] = None
                  ) -> float:
@@ -382,6 +388,7 @@ class ZooExperiment(Experiment):
         self.history: list = []
         self._t = 0          # data cursor: next global step fit() will take
         self.restores = 0    # bumped on every restore (serving-cache probe)
+        self.last_reshard = None   # stats dict of the last elastic restore
         self.telemetry = telemetry  # Tracer, or None = NULL_TRACER
 
         from repro.train import gspmd
@@ -389,6 +396,8 @@ class ZooExperiment(Experiment):
         self.head = make_head(self.model_cfg, self.head_cfg)
         self._maxis, _, _ = gspmd.vocab_axes(self.par)
         n_shards = gspmd.n_vocab_shards(self.par)
+        self._n_vocab_shards = n_shards
+        self._n_data = n_data
         with jax.set_mesh(self.mesh):
             params = lm.init_model(jax.random.PRNGKey(seed), self.model_cfg)
             shards = gspmd.param_shardings(self.model_cfg, self.par,
@@ -516,18 +525,33 @@ class ZooExperiment(Experiment):
                       "seed": jnp.asarray(0, jnp.int32)},
         }
 
+    def geometry(self):
+        """This experiment's ``repro.elastic.MeshGeometry``: the model
+        axis counts vocab row shards; classes are the REAL (unpadded)
+        vocabulary, which is mesh-invariant — padding is recorded
+        separately in the checkpoint meta."""
+        from repro.elastic import MeshGeometry
+        return MeshGeometry(n_model=self._n_vocab_shards,
+                            n_data=self._n_data,
+                            n_classes=effective_vocab(self.model_cfg))
+
     def save_checkpoint(self) -> str:
         assert self.ckpt_dir, "experiment has no ckpt_dir"
         from repro import checkpoint as ckpt
+        meta = {"system": "zoo", **self.geometry().meta(),
+                "padded_vocab": self.model_cfg.vocab_size}
         return ckpt.save(self.ckpt_dir, self._snapshot(), step=self._t,
-                         keep=self.ckpt_keep or None)
+                         keep=self.ckpt_keep or None, meta=meta)
 
     def restore(self, step: Optional[int] = None, *,
-                missing_ok: bool = False) -> Optional[int]:
+                missing_ok: bool = False,
+                reshard: bool = False) -> Optional[int]:
         """Refill model + head + optimizer state from ``ckpt_dir`` and move
         the data cursor. Restored aux is installed as-is (NOT rebuilt): a
         run killed mid-refresh-interval resumes with the exact graph /
-        tables the killed run was using."""
+        tables the killed run was using. ``reshard=True`` accepts a
+        checkpoint written on a different (data, model) mesh and
+        re-shards it onto this one (repro.elastic)."""
         import jax
         from jax.sharding import NamedSharding
         from jax.sharding import PartitionSpec as P
@@ -543,14 +567,37 @@ class ZooExperiment(Experiment):
         from repro.telemetry import NULL_TRACER
         tr = self.telemetry or NULL_TRACER
         with tr.span("train.restore"):
-            return self._do_restore(step, NamedSharding, P, tr)
+            return self._do_restore(step, NamedSharding, P, tr, reshard)
 
-    def _do_restore(self, step, NamedSharding, P, tr) -> int:
+    def _do_restore(self, step, NamedSharding, P, tr,
+                    reshard: bool = False) -> int:
+        import time
+
         import jax
 
         from repro import checkpoint as ckpt
+        from repro import elastic
         from repro.api.heads import HeadState
+        dst = self.geometry()
+        src = ckpt.validate_restore(self.ckpt_dir, dst, step,
+                                    reshard=reshard)
+        src_meta = ckpt.read_meta(self.ckpt_dir, step) or {}
         tree, step = ckpt.restore(self.ckpt_dir, self._snapshot(), step)
+        needs_refresh = False
+        if (src.n_model, src.n_data) != (dst.n_model, dst.n_data):
+            t0 = time.perf_counter()
+            with tr.span("train.reshard",
+                         attrs={"src": src.describe(),
+                                "dst": dst.describe()}):
+                tree, needs_refresh, led = elastic.reshard_zoo_snapshot(
+                    tree, self.head, self.model_cfg, src, dst,
+                    padded_vocab_src=int(
+                        src_meta.get("padded_vocab",
+                                     self.model_cfg.vocab_size)))
+            tr.count("reshard.bytes_moved", led.total_bytes())
+            self.last_reshard = {
+                "src": src, "dst": dst, "bytes_moved": led.total_bytes(),
+                "ledger": led, "seconds": time.perf_counter() - t0}
         with jax.set_mesh(self.mesh):
             shards = self._gspmd.param_shardings(self.model_cfg, self.par,
                                                  self.mesh)
@@ -574,15 +621,18 @@ class ZooExperiment(Experiment):
         self._t = int(tree["extra"]["t"])
         self.restores += 1
         tr.count("train.restores")
-        # aux came from the snapshot; do NOT rebuild it before the next step
-        self._refreshed = True
+        # aux came from the snapshot; do NOT rebuild it before the next
+        # step — unless the elastic path asked for the head's own refresh
+        self._refreshed = not needs_refresh
         return step
 
-    def fit(self, steps: int, *, lr: float = 0.5, resume: bool = False,
+    def fit(self, steps: int, *, lr: float = 0.5, resume=False,
             step_hook=None, telemetry=None):
         """Train ``steps`` steps from the current cursor. ``resume=True``
         restores the latest checkpoint first (if any) and treats ``steps``
-        as the TOTAL target, like ``PaperExperiment.fit``. ``step_hook(t)``
+        as the TOTAL target, like ``PaperExperiment.fit``;
+        ``resume="reshard"`` additionally accepts a checkpoint written on
+        a different mesh (repro.elastic). ``step_hook(t)``
         is the fault-injection seam (``repro.resilience``); ``telemetry=``
         installs a ``repro.telemetry.Tracer`` for per-phase spans and the
         JSONL metrics stream (docs/telemetry.md)."""
@@ -594,7 +644,7 @@ class ZooExperiment(Experiment):
             self.telemetry = telemetry
         tr = self.telemetry or NULL_TRACER
         if resume:
-            self.restore(missing_ok=True)
+            self.restore(missing_ok=True, reshard=(resume == "reshard"))
             steps = steps - self._t
             if steps <= 0:
                 return self.history

@@ -140,6 +140,27 @@ class SoftmaxHead:
         aux = put(tree["aux"], self.aux_spec(model_axis))
         return HeadState(params=params, aux=aux)
 
+    # -- elastic resharding (repro.elastic) -------------------------------
+    def reshard_state(self, tree, src, dst):
+        """Map a host-side ``state_to_save`` snapshot written on the
+        ``src`` mesh geometry onto ``dst`` (both
+        ``repro.elastic.MeshGeometry``). Dense [V, D] params are stored as
+        GLOBAL rows and pass through; heads whose aux bakes in the ring
+        size override with an exact re-pack. Returns
+        ``(tree, needs_refresh)`` — the default for aux without a re-pack
+        rule re-initializes it shape-correct for the dst ring and asks the
+        trainer to run the head's own ``refresh`` path after placement."""
+        if src.n_model == dst.n_model or not jax.tree.leaves(tree["aux"]):
+            return tree, False
+        return dict(tree, aux=self.init_aux(jax.random.PRNGKey(0),
+                                            dst.n_model)), True
+
+    def reshard_params_like(self, arr, src, dst):
+        """Reshard one optimizer-moment leaf shaped like ``params``.
+        Identity for heads whose params are global [V, D] rows; sketch
+        heads apply their bucket transfer so moments track params."""
+        return arr
+
     # -- periodic work ----------------------------------------------------
     @property
     def refresh_every(self) -> int:
@@ -285,6 +306,17 @@ class KNNSoftmaxHead(FullSoftmaxHead):
         return {"accuracy": P(), "logz": P(), "active_frac": P(),
                 "label_recall": P()}
 
+    def reshard_state(self, tree, src, dst):
+        """Exact CSR re-pack: the per-shard graph compression is
+        invertible (``ranks`` keeps original columns), so the restored
+        graph — mid-refresh staleness included — is preserved bit-for-bit
+        and n->m->n round-trips to the identity."""
+        if src.n_model == dst.n_model:
+            return tree, False
+        from repro.elastic.reshard import repack_knn_aux
+        return dict(tree, aux=repack_knn_aux(tree["aux"],
+                                             dst.n_model)), False
+
 
 # ---------------------------------------------------------------------------
 # selective softmax [Zhang et al., AAAI'18] — LSH active classes
@@ -349,6 +381,18 @@ class SelectiveSoftmaxHead(FullSoftmaxHead):
         return {"accuracy": P(), "logz": P(), "active_frac": P(),
                 "label_recall": P()}
 
+    def reshard_state(self, tree, src, dst):
+        """Exact table re-pack: bucket assignments are a function of the
+        replicated planes and the global W rows (mesh-independent), so the
+        per-shard CSRs invert to a class->bucket map and re-sort per dst
+        shard with the builder's own stable-sort semantics — bitwise what
+        ``build_sharded_lsh_tables`` would emit for the same assignment."""
+        if src.n_model == dst.n_model:
+            return tree, False
+        from repro.elastic.reshard import repack_lsh_aux
+        return dict(tree, aux=repack_lsh_aux(tree["aux"],
+                                             dst.n_model)), False
+
 
 # ---------------------------------------------------------------------------
 # MACH [Medini et al., NeurIPS'19] — R hashed B-way softmaxes
@@ -361,6 +405,7 @@ class MACHSoftmaxHead(SoftmaxHead):
     over the model axis; static class->bucket hash tables replicated."""
 
     params_are_class_weights = False
+    _hash_seed = 0          # universal-hash family seed (csoft uses 1)
 
     def _n_buckets(self, n_dev: int) -> int:
         # bucket axis must divide the ring
@@ -370,7 +415,8 @@ class MACHSoftmaxHead(SoftmaxHead):
     def init(self, key, n_dev: int) -> HeadState:
         head = bl.init_mach(key, self.n_classes, self.d,
                             n_buckets=self._n_buckets(n_dev),
-                            n_rep=self.head_cfg.mach_r)
+                            n_rep=self.head_cfg.mach_r,
+                            seed=self._hash_seed)
         return HeadState(params=head.w, aux=(head.hashes,))
 
     def params_spec(self, model_axis):
@@ -378,6 +424,40 @@ class MACHSoftmaxHead(SoftmaxHead):
 
     def aux_spec(self, model_axis):
         return (P(),)
+
+    def reshard_state(self, tree, src, dst):
+        """Keep the stored bucket weights AND hash tables verbatim when
+        the stored bucket count still divides the dst ring (the loss reads
+        B from the shard shape) — bitwise decode-equivalence. Otherwise
+        re-bucket: re-hash classes with the SAME universal family at the
+        new modulus and transfer each new bucket the mean of its member
+        classes' old bucket weights (the lossy case; docs/resilience.md)."""
+        import numpy as np
+        w = np.asarray(jax.device_get(tree["params"]))
+        if w.shape[1] % dst.n_model == 0:
+            return tree, False
+        from repro.elastic.reshard import rebucket_sketch
+        b_dst = self._n_buckets(dst.n_model)
+        h_new = bl.mach_hashes(self.n_classes, b_dst, n_rep=w.shape[0],
+                               seed=self._hash_seed)
+        w_new = rebucket_sketch(w, tree["aux"][0], h_new, b_dst)
+        return dict(tree, params=jnp.asarray(w_new),
+                    aux=(jnp.asarray(h_new),)), False
+
+    def reshard_params_like(self, arr, src, dst):
+        import numpy as np
+        a = np.asarray(jax.device_get(arr))
+        if a.ndim != 3 or a.shape[1] % dst.n_model == 0:
+            return arr
+        from repro.elastic.reshard import rebucket_sketch
+        b_dst = self._n_buckets(dst.n_model)
+        # both tables recompute deterministically from the family seed, so
+        # moments get the identical transfer the params got
+        h_old = bl.mach_hashes(self.n_classes, a.shape[1],
+                               n_rep=a.shape[0], seed=self._hash_seed)
+        h_new = bl.mach_hashes(self.n_classes, b_dst, n_rep=a.shape[0],
+                               seed=self._hash_seed)
+        return jnp.asarray(rebucket_sketch(a, h_old, h_new, b_dst))
 
     def loss_local(self, f_all, y_all, params, aux, *, model_axis,
                    batch_axes, global_batch, step=None):
@@ -447,6 +527,8 @@ class CSoftSketchHead(MACHSoftmaxHead):
     count-min bound, instead of MACH's mean of probabilities;
     ``csoft_agg="mean"`` selects the geometric-mean variant."""
 
+    _hash_seed = 1
+
     def _n_buckets(self, n_dev: int) -> int:
         # bucket axis must divide the ring
         b = self.head_cfg.csoft_b
@@ -455,7 +537,8 @@ class CSoftSketchHead(MACHSoftmaxHead):
     def init(self, key, n_dev: int) -> HeadState:
         head = bl.init_mach(key, self.n_classes, self.d,
                             n_buckets=self._n_buckets(n_dev),
-                            n_rep=self.head_cfg.csoft_r, seed=1)
+                            n_rep=self.head_cfg.csoft_r,
+                            seed=self._hash_seed)
         return HeadState(params=head.w, aux=(head.hashes,))
 
     def eval_logits_local(self, f_all, params, aux, *, model_axis):

@@ -1,4 +1,6 @@
 from repro.checkpoint.checkpoint import (all_steps, latest_step, prune,
-                                         restore, save)
+                                         read_meta, restore, save,
+                                         validate_restore)
 
-__all__ = ["save", "restore", "latest_step", "all_steps", "prune"]
+__all__ = ["save", "restore", "latest_step", "all_steps", "prune",
+           "read_meta", "validate_restore"]

@@ -60,18 +60,21 @@ def _key_str(path) -> str:
 
 
 def save(path: str, tree: Any, step: int = 0,
-         keep: Optional[int] = None) -> str:
+         keep: Optional[int] = None, meta: Optional[dict] = None) -> str:
     """Write ``<path>/ckpt_<step>.msgpack.zst``. Returns the file path.
 
     The write is atomic (tmp file + ``os.replace``): a run killed mid-write
     never leaves a truncated checkpoint behind for ``latest_step`` to find.
     ``keep=N`` prunes all but the N highest-step files AFTER the new file is
     durable (oldest steps first — a long-run cadence must not fill the
-    disk); ``keep=None``/0 retains everything.
+    disk); ``keep=None``/0 retains everything. ``meta`` is a small
+    msgpack-able dict stored alongside the leaves — the trainers record
+    their mesh geometry here so ``validate_restore`` can reject (or
+    ``repro.elastic`` can reshard) a mismatched restore up front.
     """
     os.makedirs(path, exist_ok=True)
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
-    payload = {"step": step, "leaves": {}}
+    payload = {"step": step, "meta": dict(meta or {}), "leaves": {}}
     for kp, leaf in leaves_with_paths:
         arr = np.asarray(jax.device_get(leaf))
         payload["leaves"][_key_str(kp)] = {
@@ -114,6 +117,39 @@ def prune(path: str, keep: int) -> list:
 def latest_step(path: str) -> Optional[int]:
     steps = all_steps(path)
     return steps[-1] if steps else None
+
+
+def read_meta(path: str, step: Optional[int] = None) -> Optional[dict]:
+    """The geometry/meta dict stored with a checkpoint (``save(meta=...)``)
+    — None for files written before meta existed (those can only assert
+    same-mesh restores; there is nothing to validate against)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    fname = os.path.join(path, f"ckpt_{step}.msgpack.zst")
+    with open(fname, "rb") as f:
+        raw = _decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    return payload.get("meta") or None
+
+
+def validate_restore(path: str, expect, step: Optional[int] = None, *,
+                     reshard: bool = False):
+    """Up-front geometry check BEFORE any leaf is decoded or placed.
+
+    ``expect`` is the restoring experiment's ``repro.elastic.MeshGeometry``.
+    Raises ``repro.elastic.ReshardError`` naming both geometries when the
+    class count differs (never reshardable) or when the mesh shape differs
+    and ``reshard`` was not requested — instead of the shape error the
+    mismatch used to hit deep inside jax. Returns the checkpoint's stored
+    geometry (== ``expect`` for pre-meta checkpoints).
+    """
+    from repro.elastic.plan import geometry_from_meta, validate_geometry
+    meta = read_meta(path, step)
+    src = geometry_from_meta(meta, expect)
+    validate_geometry(src, expect, reshard=reshard)
+    return src
 
 
 def restore(path: str, target: Any, step: Optional[int] = None):

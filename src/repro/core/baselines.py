@@ -122,16 +122,27 @@ class MACHHead(NamedTuple):
     w: jax.Array        # [R, B_buckets, D]
 
 
-def init_mach(key, n_classes: int, d: int, *, n_buckets: int, n_rep: int,
-              seed: int = 0):
+def mach_hashes(n_classes: int, n_buckets: int, *, n_rep: int,
+                seed: int = 0):
+    """Static class->bucket tables [R, n_classes] int32 via universal
+    hashing on host: (a*j + b) mod p mod B. The (a, b) draw depends only
+    on (seed, n_rep) — NOT on the modulus — so the same family can be
+    re-evaluated at a new bucket count (elastic re-bucketing,
+    ``repro.elastic.reshard.rebucket_sketch``) and reproduces the stored
+    tables exactly when the count is unchanged."""
     import numpy as np
-    # universal hashing on host: (a*j + b) mod p mod B (static tables)
     rng = np.random.default_rng(seed)
     p = 2_147_483_647
     a = rng.integers(1, p // 2, size=(n_rep, 1)).astype(np.int64) * 2 + 1
     b = rng.integers(0, p, size=(n_rep, 1)).astype(np.int64)
     j = np.arange(n_classes, dtype=np.int64)[None, :]
-    hashes = jnp.asarray(((a * j + b) % p % n_buckets).astype(np.int32))
+    return ((a * j + b) % p % n_buckets).astype(np.int32)
+
+
+def init_mach(key, n_classes: int, d: int, *, n_buckets: int, n_rep: int,
+              seed: int = 0):
+    hashes = jnp.asarray(mach_hashes(n_classes, n_buckets, n_rep=n_rep,
+                                     seed=seed))
     w = jax.random.normal(key, (n_rep, n_buckets, d), jnp.float32) / jnp.sqrt(d)
     return MACHHead(hashes, w)
 

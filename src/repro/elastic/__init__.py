@@ -1,0 +1,36 @@
+"""repro.elastic — mesh-shape-agnostic checkpoint resharding.
+
+Restore any checkpoint onto any mesh shape: `MeshGeometry` records the
+source geometry in the checkpoint meta, `plan_reshard` interval-intersects
+the src/dst row partitions into a `ReshardPlan` (gather-free when aligned,
+host-staged chunked otherwise), and the transforms in
+`repro.elastic.reshard` re-pack everything the ring size was baked into —
+per-shard KNN/LSH CSRs (exactly), sketch bucket weights (re-hashed with
+the same universal family), DGC worker residuals (mass-preserving), and
+zoo vocab padding. `reshard_paper_snapshot` / `reshard_zoo_snapshot`
+drive a whole trainer snapshot through the `SoftmaxHead.reshard_state`
+seam and return an itemized "reshard" comm ledger.
+
+Entry points: `Experiment.fit(resume="reshard")`,
+`Experiment.restore(reshard=True)`, the launcher's `--resume-reshard`,
+and `repro.resilience.elastic_kill_and_recover`. See docs/resilience.md.
+"""
+from repro.elastic.apply import (analytic_reshard_ledger,
+                                 reshard_paper_snapshot,
+                                 reshard_zoo_snapshot)
+from repro.elastic.plan import (MeshGeometry, ReshardError, ReshardPlan,
+                                RowTransfer, geometry_from_meta,
+                                plan_reshard, validate_geometry)
+from repro.elastic.reshard import (decompress_graph, lsh_bucket_map,
+                                   place_row_sharded, rebucket_sketch,
+                                   redistribute_dgc, repack_knn_aux,
+                                   repack_lsh_aux, resize_vocab_rows)
+
+__all__ = [
+    "MeshGeometry", "ReshardError", "ReshardPlan", "RowTransfer",
+    "geometry_from_meta", "plan_reshard", "validate_geometry",
+    "reshard_paper_snapshot", "reshard_zoo_snapshot",
+    "analytic_reshard_ledger", "place_row_sharded", "decompress_graph",
+    "repack_knn_aux", "lsh_bucket_map", "repack_lsh_aux",
+    "rebucket_sketch", "redistribute_dgc", "resize_vocab_rows",
+]

@@ -1,0 +1,244 @@
+"""Host-side reshard transforms for every kind of mesh-shaped state.
+
+Checkpoints store host-gathered GLOBAL arrays, so dense `[V, D]` rows need
+no data movement at all — only re-placement. What this module rewrites is
+the state whose LAYOUT bakes in the ring size:
+
+  * `place_row_sharded` — put a global row-sharded array back on a mesh:
+    gather-free single `device_put` when the plan is aligned; otherwise
+    host-staged per-destination-shard placement with chunked copies
+    (peak extra host memory: one shard block + one chunk).
+  * KNN graph CSR (`decompress_graph` / `repack_knn_aux`) — the per-shard
+    CSR is exactly invertible (ranks record each entry's original column),
+    so an n->m re-pack preserves the mid-refresh-interval graph bit-for-bit
+    and n->m->n is the identity.
+  * LSH tables (`lsh_bucket_map` / `repack_lsh_aux`) — per-shard bucket
+    CSRs are inverted to a global class->bucket map and re-sorted per dst
+    shard with the same stable-sort semantics `build_sharded_lsh_tables`
+    uses, so the re-pack is exact (planes are replicated and untouched).
+  * Sketch buckets (`rebucket_sketch`) — when the stored bucket count no
+    longer divides the ring, classes are re-hashed with the SAME universal
+    hash family at the new modulus and each new bucket's weight is the
+    mean of its classes' old bucket weights (empty buckets zero). This is
+    the one lossy transform (softmax support changes with B); optimizer
+    moments get the identical mapping.
+  * DGC error feedback (`redistribute_dgc`) — the per-worker residuals are
+    redistributed mass-preservingly: every new worker gets an equal share
+    of the total pending residual (top-k sparsification is nonlinear, so
+    no per-worker split can be exactly equivalent; the total correction
+    the ring will eventually apply is preserved).
+  * Zoo vocab padding (`resize_vocab_rows`) — Megatron-style pad rows are
+    sliced off / re-grown with zeros when the dst ring implies a different
+    padded vocab (pad rows are masked out of the loss, so this is exact
+    on the real vocabulary).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.elastic.plan import ReshardError, ReshardPlan
+
+
+def _host(a) -> np.ndarray:
+    import jax
+    return np.asarray(jax.device_get(a))
+
+
+def leaf_bytes(a) -> int:
+    arr = np.asarray(a) if not hasattr(a, "nbytes") else a
+    return int(arr.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# row placement (dense [V, ...] class-sharded arrays)
+# ---------------------------------------------------------------------------
+
+
+def place_row_sharded(arr, mesh, axis_name: str,
+                      plan: ReshardPlan = None, *,
+                      max_stage_rows: int = 1 << 16):
+    """Place a global host array, row-sharded over ``mesh``'s
+    ``axis_name``, executing the plan's placement strategy.
+
+    Aligned (or no) plan: one gather-free ``device_put`` — the runtime
+    slices each device's contiguous row block straight out of the host
+    buffer. Unaligned: stage one destination shard at a time (copied in
+    ``max_stage_rows`` chunks into a reusable bounded buffer) and
+    assemble the global array from the per-device shards.
+    """
+    import jax
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    host = _host(arr)
+    spec = P(axis_name, *(None,) * (host.ndim - 1))
+    sharding = NamedSharding(mesh, spec)
+    if plan is None or plan.aligned:
+        return jax.device_put(host, sharding)
+    n_dst = plan.dst.n_model
+    if host.shape[0] % n_dst != 0:
+        raise ReshardError(
+            f"cannot place {host.shape} rows over {n_dst} shards")
+    v_loc = host.shape[0] // n_dst
+    devices = list(mesh.devices.flat)
+    stage = np.empty((v_loc,) + host.shape[1:], host.dtype)
+    shards = []
+    for q in range(n_dst):
+        for r0 in range(0, v_loc, max_stage_rows):
+            r1 = min(r0 + max_stage_rows, v_loc)
+            stage[r0:r1] = host[q * v_loc + r0:q * v_loc + r1]
+        shards.append(jax.device_put(stage.copy(), devices[q]))
+    return jax.make_array_from_single_device_arrays(
+        host.shape, sharding, shards)
+
+
+# ---------------------------------------------------------------------------
+# KNN graph CSR re-pack (exact)
+# ---------------------------------------------------------------------------
+
+
+def decompress_graph(offsets, neighbors, ranks) -> np.ndarray:
+    """Invert `knn_graph.compress_graph`: per-shard CSRs back to the
+    global ``[N, k]`` neighbor table (pad columns -1). Exact — ``ranks``
+    stores each entry's original column, and the shards partition the
+    entries — so compress(decompress(aux), m) re-packs losslessly."""
+    offsets = _host(offsets)
+    neighbors = _host(neighbors)
+    ranks = _host(ranks)
+    n_shards, n1 = offsets.shape
+    n = n1 - 1
+    n_loc = n // n_shards
+    k = int(ranks.max()) + 1 if ranks.size else 1
+    g = np.full((n, k), -1, np.int64)
+    for p in range(n_shards):
+        off = offsets[p].astype(np.int64)
+        nnz = int(off[-1])
+        rows = np.repeat(np.arange(n), np.diff(off))
+        g[rows, ranks[p, :nnz]] = neighbors[p, :nnz].astype(np.int64) \
+            + p * n_loc
+    return g
+
+
+def repack_knn_aux(aux, n_dst: int):
+    """Re-pack a (offsets, neighbors, ranks) CSR triple written for one
+    ring size onto ``n_dst`` shards, preserving the graph exactly."""
+    from repro.core import knn_graph as kg
+    g = decompress_graph(*aux)
+    if (g < 0).any():
+        # ragged rows (shorter original neighbor lists): compress ignores
+        # nothing, so pad entries must not exist — rebuild densely by
+        # dropping pad columns per row via a masked re-pack
+        raise ReshardError("KNN graph CSR has holes; cannot re-pack")
+    cg = kg.compress_graph(g, n_dst)
+    return (cg.offsets, cg.neighbors, cg.ranks)
+
+
+# ---------------------------------------------------------------------------
+# LSH table re-pack (exact)
+# ---------------------------------------------------------------------------
+
+
+def lsh_bucket_map(offsets, classes) -> np.ndarray:
+    """Invert the per-shard bucket CSRs of `build_sharded_lsh_tables` to
+    the global class->bucket assignment ``[R, V]`` (bucket values are
+    mesh-independent — a function of the replicated planes and W rows)."""
+    offsets = _host(offsets)
+    classes = _host(classes)
+    n_shards, n_tables, v_loc = classes.shape
+    n_buckets = offsets.shape[2] - 1
+    bucket = np.empty((n_tables, n_shards * v_loc), np.int64)
+    for p in range(n_shards):
+        for r in range(n_tables):
+            per_pos = np.repeat(np.arange(n_buckets),
+                                np.diff(offsets[p, r].astype(np.int64)))
+            bucket[r, p * v_loc + classes[p, r].astype(np.int64)] = per_pos
+    return bucket
+
+
+def repack_lsh_aux(aux, n_dst: int):
+    """Re-pack (planes, offsets, classes) onto ``n_dst`` shards. Planes
+    are replicated and kept; per-shard CSRs are rebuilt with the same
+    stable-sort semantics as `build_sharded_lsh_tables`, so the result is
+    exactly what the builder would emit for the SAME bucket assignment —
+    mid-refresh staleness included."""
+    planes, offsets, classes = aux
+    bucket = lsh_bucket_map(offsets, classes)
+    n_tables, v = bucket.shape
+    n_buckets = _host(offsets).shape[2] - 1
+    if v % n_dst != 0:
+        raise ReshardError(f"V={v} not divisible by dst shards={n_dst}")
+    v_loc = v // n_dst
+    new_off = np.zeros((n_dst, n_tables, n_buckets + 1), np.int32)
+    new_cls = np.zeros((n_dst, n_tables, v_loc), np.int32)
+    for q in range(n_dst):
+        for r in range(n_tables):
+            bloc = bucket[r, q * v_loc:(q + 1) * v_loc]
+            order = np.argsort(bloc, kind="stable").astype(np.int32)
+            new_cls[q, r] = order
+            new_off[q, r] = np.searchsorted(
+                bloc[order], np.arange(n_buckets + 1)).astype(np.int32)
+    return (planes, new_off, new_cls)
+
+
+# ---------------------------------------------------------------------------
+# sketch-head bucket transfer (lossy, class-mean)
+# ---------------------------------------------------------------------------
+
+
+def rebucket_sketch(w, h_old, h_new, n_buckets_new: int) -> np.ndarray:
+    """Transfer ``[R, B_old, D]`` bucket weights onto a new hash table:
+    each new bucket's weight is the mean of its member classes' OLD bucket
+    weights (empty new buckets stay zero). Deterministic, so params and
+    optimizer moments map identically."""
+    w = _host(w).astype(np.float32)
+    h_old = _host(h_old).astype(np.int64)
+    h_new = _host(h_new).astype(np.int64)
+    n_rep, _, d = w.shape
+    out = np.zeros((n_rep, n_buckets_new, d), np.float32)
+    counts = np.zeros((n_rep, n_buckets_new), np.int64)
+    for r in range(n_rep):
+        np.add.at(out[r], h_new[r], w[r][h_old[r]])
+        np.add.at(counts[r], h_new[r], 1)
+    out /= np.maximum(counts, 1)[..., None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DGC error feedback (mass-preserving)
+# ---------------------------------------------------------------------------
+
+
+def redistribute_dgc(tree, n_dst: int):
+    """Redistribute ``[n_src, ...]``-leading error-feedback leaves over
+    ``n_dst`` workers: every new worker gets total/n_dst, preserving the
+    total pending residual each parameter will eventually receive."""
+    import jax
+
+    def one(a):
+        h = _host(a)
+        total = h.sum(axis=0, dtype=h.dtype)
+        return np.broadcast_to(total / n_dst, (n_dst,) + total.shape).copy()
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# zoo vocab padding
+# ---------------------------------------------------------------------------
+
+
+def resize_vocab_rows(arr, v_src: int, v_dst: int, *, n_real: int):
+    """Slice / zero-pad a vocab-leading array between two padded vocab
+    sizes. Only pad rows (>= ``n_real``) may be created or dropped."""
+    a = _host(arr)
+    if a.shape[0] != v_src:
+        return a
+    if v_src == v_dst:
+        return a
+    if min(v_src, v_dst) < n_real:
+        raise ReshardError(
+            f"vocab resize {v_src}->{v_dst} would drop real rows "
+            f"(real vocab {n_real})")
+    if v_dst < v_src:
+        return np.ascontiguousarray(a[:v_dst])
+    pad = np.zeros((v_dst - v_src,) + a.shape[1:], a.dtype)
+    return np.concatenate([a, pad], axis=0)

@@ -21,6 +21,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 
@@ -56,21 +57,45 @@ def parse_args(argv=None):
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--ckpt-every", type=int, default=50,
                    help="full-state snapshot cadence (steps); both systems")
-    p.add_argument("--ckpt-keep", type=int, default=0,
-                   help="retain only the N newest checkpoints (0 = all)")
-    p.add_argument("--resume", action="store_true",
-                   help="restore the latest checkpoint under --ckpt-dir and "
-                        "run only the remaining steps (--steps is the TOTAL)")
+    p.add_argument("--ckpt-keep", type=int, default=None,
+                   help="retain only the N newest checkpoints "
+                        "(>= 1; omit to keep all)")
+    p.add_argument("--resume", nargs="?", const=True, default=False,
+                   metavar="CKPT",
+                   help="restore the latest checkpoint and run only the "
+                        "remaining steps (--steps is the TOTAL). With no "
+                        "value, restores from --ckpt-dir; a value names a "
+                        "checkpoint directory (or a .msgpack.zst file inside "
+                        "one) and implies --ckpt-dir")
+    p.add_argument("--resume-reshard", action="store_true",
+                   help="allow --resume from a checkpoint written on a "
+                        "DIFFERENT mesh shape: re-shards it onto this run's "
+                        "--devices mesh (repro.elastic); implies --resume")
     p.add_argument("--trace-out", default="", metavar="PATH",
                    help="write a Chrome-trace/Perfetto JSON of the run's "
                         "telemetry spans (open at https://ui.perfetto.dev)")
     p.add_argument("--metrics-out", default="", metavar="PATH",
                    help="append per-step train metrics as JSONL")
     args = p.parse_args(argv)
+    if args.resume_reshard and not args.resume:
+        args.resume = True
+    if isinstance(args.resume, str):
+        # --resume CKPT names the checkpoint to restore from; accept either
+        # the directory or one of its .msgpack.zst files
+        path = args.resume
+        if path.endswith(".msgpack.zst"):
+            path = os.path.dirname(path) or "."
+        if args.ckpt_dir and args.ckpt_dir != path:
+            p.error(f"--resume {args.resume} conflicts with "
+                    f"--ckpt-dir {args.ckpt_dir}")
+        args.ckpt_dir = path
+        args.resume = True
     if args.resume and not args.ckpt_dir:
-        p.error("--resume requires --ckpt-dir")
-    if args.ckpt_keep < 0 or args.ckpt_every < 0:
-        p.error("--ckpt-keep/--ckpt-every must be >= 0")
+        p.error("--resume requires --ckpt-dir (or --resume CKPT)")
+    if args.ckpt_keep is not None and args.ckpt_keep <= 0:
+        p.error("--ckpt-keep must be >= 1 (omit the flag to keep all)")
+    if args.ckpt_every < 0:
+        p.error("--ckpt-every must be >= 0")
     return args
 
 
@@ -101,6 +126,8 @@ def main(argv=None):
             print(f"[telemetry] metrics -> {args.metrics_out}")
         telemetry.close()
 
+    resume = "reshard" if args.resume_reshard else bool(args.resume)
+
     if args.system == "paper":
         # --knn is a back-compat alias; an explicit non-default --head wins
         impl = "knn" if (args.knn and args.head == "full") else args.head
@@ -120,8 +147,8 @@ def main(argv=None):
             system="paper", trunk=args.trunk, classes=args.classes,
             feat_dim=args.feat_dim, batch=args.batch, head=hcfg, train=tcfg,
             ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
-            ckpt_keep=args.ckpt_keep)
-        exp.fit(args.steps, use_fccs_batch=args.fccs, resume=args.resume,
+            ckpt_keep=args.ckpt_keep or 0)
+        exp.fit(args.steps, use_fccs_batch=args.fccs, resume=resume,
                 telemetry=telemetry)
         acc = exp.evaluate(eval_batch=args.batch * 4)
         print(f"[train] final eval accuracy: {acc:.4f}")
@@ -136,8 +163,8 @@ def main(argv=None):
                         knn_kprime=32, active_frac=0.1, rebuild_every=100),
         train=TrainConfig(optimizer=args.optimizer),
         ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
-        ckpt_keep=args.ckpt_keep)
-    exp.fit(args.steps, lr=args.lr, resume=args.resume, telemetry=telemetry)
+        ckpt_keep=args.ckpt_keep or 0)
+    exp.fit(args.steps, lr=args.lr, resume=resume, telemetry=telemetry)
     acc = exp.evaluate()
     print(f"[zoo] final next-token accuracy: {acc:.4f}")
     finish_telemetry()

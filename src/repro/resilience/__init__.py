@@ -4,8 +4,9 @@ See docs/resilience.md for the per-head checkpoint contract and the
 recovery equivalence classes the harness asserts.
 """
 from repro.resilience.faults import FaultPlan, SimulatedFault, fault_hook
-from repro.resilience.harness import (RecoveryReport, kill_and_recover,
-                                      tree_compare)
+from repro.resilience.harness import (RecoveryReport,
+                                      elastic_kill_and_recover,
+                                      kill_and_recover, tree_compare)
 
 __all__ = ["FaultPlan", "SimulatedFault", "fault_hook", "RecoveryReport",
-           "kill_and_recover", "tree_compare"]
+           "elastic_kill_and_recover", "kill_and_recover", "tree_compare"]

@@ -98,22 +98,33 @@ class RecoveryReport:
     max_abs_diff: float
     mismatches: list = field(default_factory=list)
     loss_max_rel: float = 0.0         # resumed-vs-reference loss rows
+    loss_tol: float = 1e-4            # trajectory acceptance bound
     resumed_history: list = field(default_factory=list)
     reference_history: list = field(default_factory=list)
     restore_spans: list = field(default_factory=list)  # telemetry
                                       # "train.restore" SpanEvents
+    # elastic (shrink/grow) legs only — zero/empty on same-mesh recovery
+    reshard_s: float = 0.0            # "train.reshard" span wall-clock
+    reshard_bytes_moved: float = 0.0  # "reshard.bytes_moved" counter
+    src_mesh: str = ""                # geometry the checkpoint was written on
+    dst_mesh: str = ""                # geometry the resumed run restored onto
 
     @property
     def ok(self) -> bool:
         if self.equivalence == "bitwise":
             return self.bitwise and self.loss_max_rel == 0.0
-        return self.loss_max_rel < 1e-4
+        return self.loss_max_rel < self.loss_tol
 
     def summary(self) -> str:
+        elastic = ""
+        if self.src_mesh and self.src_mesh != self.dst_mesh:
+            elastic = (f" reshard {self.src_mesh}->{self.dst_mesh} "
+                       f"{self.reshard_bytes_moved / 1e6:.2f} MB "
+                       f"{self.reshard_s * 1e3:.0f} ms;")
         return (f"[{self.head}] kill@{self.kill_at} -> restore@"
                 f"{self.restored_step} (+{self.steps_replayed} replayed, "
-                f"{self.recovery_s * 1e3:.0f} ms restore) "
-                f"{self.equivalence}: "
+                f"{self.recovery_s * 1e3:.0f} ms restore)"
+                f"{elastic} {self.equivalence}: "
                 f"{'OK' if self.ok else 'DIVERGED ' + str(self.mismatches)}")
 
 
@@ -196,3 +207,90 @@ def kill_and_recover(make_exp: Callable[[Optional[str]], object], *,
         reference_history=list(_history_of(ref)),
         restore_spans=[e for e in tele.events
                        if e.name == "train.restore"])
+
+
+def _mesh_of(exp) -> str:
+    return str(dict(exp.mesh.shape))
+
+
+def elastic_kill_and_recover(
+        make_src_exp: Callable[[Optional[str]], object],
+        make_dst_exp: Callable[[Optional[str]], object], *,
+        total_steps: int, kill_at: int, ckpt_dir: str, head: str = "?",
+        fit_kw: Optional[dict] = None, plan: Optional[FaultPlan] = None,
+        loss_tol: float = 0.1, telemetry=None) -> RecoveryReport:
+    """The shrink/grow leg: kill a run on the SOURCE mesh, resume it on a
+    DIFFERENT destination mesh through the elastic reshard path, and
+    compare its loss trajectory against an uninterrupted reference run on
+    the destination mesh.
+
+    ``make_src_exp`` / ``make_dst_exp`` build fresh experiments on the two
+    mesh shapes (same config otherwise). Equivalence is ``"trajectory"``
+    by construction, and the tolerance is loose by design: the hybrid
+    trainer differentiates INSIDE the shard_map body, where the psum
+    transpose sums one replicated cotangent per device, so the head
+    gradient's effective scale is proportional to the ring size (a fixed
+    property of the trainer — on any one mesh it is a constant folded
+    into the effective lr). The victim's pre-kill steps therefore
+    optimize at the SRC ring's scale while the reference ran at the DST
+    ring's throughout; the restore itself is exact (bitwise dense state —
+    tests/test_elastic.py), and ``loss_tol`` bounds the percent-level
+    trajectory gap the differing pre-kill scale leaves behind. The
+    final-state tree compare is skipped (mesh-shaped aux legitimately
+    differs in shape). The report additionally records the reshard
+    wall-clock ("train.reshard" span) and bytes moved
+    ("reshard.bytes_moved" counter).
+    """
+    from repro.telemetry import Tracer
+    if not 0 < kill_at < total_steps:
+        raise ValueError(f"kill_at must be inside (0, {total_steps}), "
+                         f"got {kill_at}")
+    fit_kw = dict(fit_kw or {})
+    plan = plan or FaultPlan(kill_at=kill_at)
+
+    # 1. uninterrupted reference on the DESTINATION mesh
+    ref = make_dst_exp(None)
+    ref.fit(total_steps, **fit_kw)
+
+    # 2. victim on the SOURCE mesh, checkpointing, killed mid-run
+    victim = make_src_exp(ckpt_dir)
+    src_mesh = _mesh_of(victim)
+    try:
+        victim.fit(total_steps, step_hook=fault_hook(plan), **fit_kw)
+        raise AssertionError(
+            f"fault plan {plan} never fired in {total_steps} steps")
+    except SimulatedFault:
+        pass
+
+    # 3. fresh dst-mesh trainer reshards the checkpoint and replays
+    tele = telemetry if telemetry is not None else Tracer()
+    t0 = time.perf_counter()
+    resumed = make_dst_exp(ckpt_dir)
+    if hasattr(resumed, "trainer"):        # paper system
+        resumed.trainer.telemetry = tele
+    else:                                  # zoo system
+        resumed.telemetry = tele
+    restored_step = resumed.restore(reshard=True)
+    recovery_s = time.perf_counter() - t0
+    remaining = total_steps - _cursor_of(resumed)
+    if remaining > 0:
+        resumed.fit(remaining, **fit_kw)
+
+    reshard_ns = sum(e.dur_ns for e in tele.events
+                     if e.name == "train.reshard")
+    return RecoveryReport(
+        head=head, equivalence="trajectory", kill_at=kill_at,
+        restored_step=restored_step,
+        steps_replayed=kill_at - restored_step, recovery_s=recovery_s,
+        bitwise=False, max_abs_diff=float("nan"),
+        loss_max_rel=_loss_divergence(_history_of(resumed),
+                                      _history_of(ref)),
+        loss_tol=loss_tol,
+        resumed_history=list(_history_of(resumed)),
+        reference_history=list(_history_of(ref)),
+        restore_spans=[e for e in tele.events
+                       if e.name in ("train.restore", "train.reshard")],
+        reshard_s=reshard_ns * 1e-9,
+        reshard_bytes_moved=float(
+            tele.counters.get("reshard.bytes_moved", 0.0)),
+        src_mesh=src_mesh, dst_mesh=_mesh_of(resumed))

@@ -48,8 +48,13 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+# "reshard" is not an HLO collective: it charges the host/wire bytes an
+# elastic restore moves when re-partitioning checkpoint rows onto a new
+# mesh (repro.elastic). Train-step ledgers never add it, and ``compare``
+# skips kinds that are zero on both sides, so HLO cross-checks are
+# unaffected; BENCH_table8.json gates it via ``analytic_reshard_ledger``.
 COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
-                    "all-to-all", "collective-permute")
+                    "all-to-all", "collective-permute", "reshard")
 
 # heads whose per-step collective structure the ledger models exactly
 LEDGER_HEADS = ("full", "knn")

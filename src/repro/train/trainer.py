@@ -77,6 +77,7 @@ class PaperTrainer:
         self._steps = {}
         self._t = 0          # data cursor: next step index run() will take
         self.restores = 0    # bumped on every restore (serving-cache probe)
+        self.last_reshard = None   # stats dict of the last elastic restore
         # initial refresh: heads with derived aux state (KNN graph, LSH
         # tables) build it from the freshly-initialized weights; a no-op
         # for heads without periodic work.
@@ -127,27 +128,67 @@ class PaperTrainer:
             tree["dgc"] = {"u": st.dgc.u, "v": st.dgc.v}
         return tree
 
-    def save_checkpoint(self) -> str:
-        """Atomic full-state snapshot at the current cursor."""
-        assert self.ckpt_dir, "trainer has no ckpt_dir"
-        return ckpt_lib.save(self.ckpt_dir, self._snapshot(), step=self._t,
-                             keep=self.ckpt_keep or None)
+    def geometry(self):
+        """This trainer's ``repro.elastic.MeshGeometry`` (the hybrid ring
+        is both the model and the data axis)."""
+        from repro.elastic import MeshGeometry
+        return MeshGeometry(n_model=self.n_dev, n_data=self.n_dev,
+                            n_classes=self.model_cfg.vocab_size)
 
-    def restore_checkpoint(self, step: Optional[int] = None) -> int:
+    def save_checkpoint(self) -> str:
+        """Atomic full-state snapshot at the current cursor. The mesh
+        geometry rides along as checkpoint meta so a restore on a
+        different ring is caught up front (or resharded — repro.elastic)."""
+        assert self.ckpt_dir, "trainer has no ckpt_dir"
+        meta = {"system": "paper", **self.geometry().meta()}
+        return ckpt_lib.save(self.ckpt_dir, self._snapshot(), step=self._t,
+                             keep=self.ckpt_keep or None, meta=meta)
+
+    def restore_checkpoint(self, step: Optional[int] = None, *,
+                           reshard: bool = False) -> int:
         """Refill the FULL trainer state from ``ckpt_dir`` (latest step by
         default) and move the data cursor so the next ``run`` continues the
-        killed run step-for-step. Returns the restored step."""
+        killed run step-for-step. ``reshard=True`` accepts a checkpoint
+        written on a DIFFERENT ring size and re-shards it onto this one
+        (repro.elastic); without it a mesh mismatch raises ``ReshardError``
+        before any leaf is decoded. Returns the restored step."""
         assert self.ckpt_dir, "trainer has no ckpt_dir"
         from jax.sharding import NamedSharding
 
         tr = self.telemetry or NULL_TRACER
         with tr.span("train.restore"):
-            return self._restore_checkpoint(step, NamedSharding, tr)
+            return self._restore_checkpoint(step, NamedSharding, tr,
+                                            reshard)
 
-    def _restore_checkpoint(self, step, NamedSharding, tr) -> int:
+    def _restore_checkpoint(self, step, NamedSharding, tr, reshard) -> int:
+        from repro import elastic
+        dst = self.geometry()
+        src = ckpt_lib.validate_restore(self.ckpt_dir, dst, step,
+                                        reshard=reshard)
         tree, step = ckpt_lib.restore(self.ckpt_dir, self._snapshot(), step)
         specs = hybrid.state_specs(self.state, self.head)
         mesh = self.mesh
+
+        needs_refresh, plan = False, None
+        if src.n_model != dst.n_model:
+            t0 = time.perf_counter()
+            with tr.span("train.reshard",
+                         attrs={"src": src.describe(),
+                                "dst": dst.describe()}):
+                tree, needs_refresh, led = elastic.reshard_paper_snapshot(
+                    tree, self.head, src, dst)
+                plan = elastic.plan_reshard(src, dst)
+                if not plan.aligned and self.head.params_are_class_weights:
+                    # host-staged chunked placement of the dense rows (the
+                    # aligned case device_puts gather-free below)
+                    tree["head"]["params"] = elastic.place_row_sharded(
+                        tree["head"]["params"], mesh, hybrid.AXIS, plan)
+            bytes_moved = led.total_bytes()
+            tr.count("reshard.bytes_moved", bytes_moved)
+            self.last_reshard = {
+                "src": src, "dst": dst, "plan": plan.describe(),
+                "bytes_moved": bytes_moved, "ledger": led,
+                "seconds": time.perf_counter() - t0}
 
         def put(subtree, spec_tree):
             return jax.tree.map(
@@ -168,6 +209,10 @@ class PaperTrainer:
         self._t = int(tree["extra"]["t"])
         self.restores += 1
         tr.count("train.restores")
+        if needs_refresh:
+            # the head had aux with no exact re-pack rule: run its own
+            # refresh path on the dst mesh (the tentpole's rebuild leg)
+            self.refresh_head()
         return step
 
     # -- the loop ----------------------------------------------------------
